@@ -1,0 +1,84 @@
+"""Fig. 1 analogue: execution-engine comparison (AS/TS/O3 -> eager/blockwise/
+compiled) for the same model, profiled by the same external sampler.
+
+Reports tokens/host-second per engine plus the share of host samples spent in
+jax dispatch frames — the "bookkeeping frames dominate" observation (paper
+§II-B: ~20 pybind frames per gem5 stack <-> jax dispatch frames here). The
+paper's counter-intuitive finding (the 'simpler' execution model is not
+faster) reproduces as eager/blockwise trailing the fully-compiled engine
+despite running identical math."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import BlockwiseEngine, CompiledEngine, EagerEngine, SamplerConfig, StackSampler
+from repro.models import Model
+from repro.models.modules import rms_norm
+from repro.models.transformer import _ffn_kind, block_apply
+
+from .common import row
+
+B, S, STEPS = 2, 64, 3
+
+
+def main() -> list[str]:
+    cfg = get_config("qwen3-4b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": labels}
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def full_loss(p):
+        return model.loss(p, batch)[0]
+
+    # blockwise stages with REAL math: embed -> layer_j... -> head+CE
+    def stage_embed(_):
+        return jnp.take(params["embed"]["table"], tokens, axis=0).astype(jnp.bfloat16)
+
+    def make_layer_stage(j):
+        def stage(x):
+            unit = jax.tree.map(lambda a: a[j], params["layers"]["scan"])
+            h, _ = block_apply(unit["block0"], x, cfg, "attn", _ffn_kind(cfg, 0), positions, scope=f"layer{j}")
+            return h
+
+        return stage
+
+    def stage_head(x):
+        x = rms_norm(params["final_norm"], x, scope="final_norm")
+        logits = model.logits_fn(params, x)
+        lsm = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        return -jnp.take_along_axis(lsm, labels[..., None], -1).mean()
+
+    n_units = params["layers"]["scan"]["block0"]["norm1"]["scale"].shape[0]
+    stages = [stage_embed] + [make_layer_stage(j) for j in range(n_units)] + [stage_head]
+
+    engines = [EagerEngine(full_loss), BlockwiseEngine(stages), CompiledEngine(full_loss)]
+    out = []
+    for eng in engines:
+        sampler = StackSampler(SamplerConfig(period_s=0.02)).start()
+        res = eng.run(STEPS, lambda i: (params,))
+        tree = sampler.stop()
+        total = max(tree.total(), 1)
+        # share of samples whose *leaf* frame is jax-internal (dispatch etc.)
+        jax_share = sum(
+            n.self_metrics.get("samples", 0.0)
+            for _, n in tree.root.walk()
+            if n.name.startswith("jax::")
+        ) / total
+        tps = B * S * STEPS / res.wall_s
+        out.append(row(
+            f"fig01_engine_{eng.name}",
+            res.wall_s / STEPS * 1e6,
+            f"tokens_per_s={tps:.0f};jax_frame_share={jax_share:.2f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

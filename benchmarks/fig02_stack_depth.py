@@ -1,0 +1,49 @@
+"""Fig. 2 analogue: sampled call-stack depth of the host runtime over a short
+train run — the paper's observation that stack depth fluctuates heavily as
+the runtime moves between dispatch, compute wait, and bookkeeping."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config
+from repro.core import SamplerConfig, StackSampler
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+
+from .common import row
+
+
+def main() -> list[str]:
+    import jax.numpy as jnp
+
+    cfg = get_config("gemma-2b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4))
+    step = jax.jit(make_train_step(model, cosine_schedule(1e-3), AdamWConfig()), donate_argnums=(0, 1))
+    sampler = StackSampler(SamplerConfig(period_s=0.01)).start()
+    for i in range(6):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, _ = step(params, opt, batch)
+    jax.block_until_ready(params)
+    sampler.stop()
+    trace = sampler.depth_trace()
+    depths = [d for _, d in trace]
+    if not depths:
+        return [row("fig02_stack_depth", 0.0, "no-samples")]
+    return [
+        row(
+            "fig02_stack_depth",
+            float(len(trace)),
+            f"min={min(depths)};max={max(depths)};mean={sum(depths)/len(depths):.1f};swing={max(depths)-min(depths)}",
+        )
+    ]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

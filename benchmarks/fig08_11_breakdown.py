@@ -1,0 +1,51 @@
+"""Figs. 8/9/11 analogue: per-architecture-family runtime decomposition.
+
+The paper breaks gem5 runtime down per CPU model (AS/TS/O3) and finds the
+breakdown *differentiates workloads* only when the model is detailed enough
+(Obs. 1 vs Obs. 2). Here the device-plane tree decomposes the compiled train
+step per component (attention / mlp / moe / recurrent / norms / lm_head /
+optimizer) for one arch of each family — showing e.g. MoE archs dominated by
+expert dispatch where dense archs are dominated by attention+mlp."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import tree_from_compiled
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+
+from .common import row
+
+FAMILIES = ["qwen3-4b", "deepseek-moe-16b", "recurrentgemma-9b", "xlstm-125m"]
+COMPONENTS = ["attention", "mlp", "moe", "rg_lru", "recurrent", "mlstm", "slstm", "lm_head", "embed", "optimizer"]
+
+
+def main() -> list[str]:
+    out = []
+    for arch in FAMILIES:
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg)
+        params = model.abstract_params()
+        opt = jax.eval_shape(adamw_init, params)
+        batch = model.input_specs(type("S", (), {"kind": "train", "global_batch": 2, "seq_len": 32})())
+        step = make_train_step(model, cosine_schedule(1e-3), AdamWConfig())
+        compiled = jax.jit(step).lower(params, opt, batch).compile()
+        tree = tree_from_compiled(compiled)
+        total = max(tree.total("flops"), 1e-9)
+        shares = []
+        for comp in COMPONENTS:
+            z = tree.zoom(lambda n, c=comp: n.startswith(c))
+            s = z.total("flops") / total
+            if s > 0.005:
+                shares.append(f"{comp}={s:.2f}")
+        out.append(row(f"fig08_11_breakdown_{arch}", 0.0, ";".join(shares)))
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

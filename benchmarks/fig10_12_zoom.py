@@ -1,0 +1,66 @@
+"""Figs. 10/12 analogue: zoom-in views. The paper zooms from model-level
+breakdowns into the L1/L2 cache controllers and the fetch stage; here the
+same tree zooms into attention internals (qkv/rope/scores/pv/out) and MoE
+internals (router/dispatch/experts/combine) — the views that localized the
+§Perf fixes (e.g. the MoE combine all-reduce)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config
+from repro.core import tree_from_compiled
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+
+from .common import row
+
+
+def _shape(kind="train", gb=2, seq=32):
+    return type("S", (), {"kind": kind, "global_batch": gb, "seq_len": seq})()
+
+
+def main() -> list[str]:
+    out = []
+    # zoom 1: attention internals of a dense arch
+    cfg = get_config("qwen3-4b", smoke=True)
+    model = Model(cfg)
+    compiled = (
+        jax.jit(make_train_step(model, cosine_schedule(1e-3), AdamWConfig()))
+        .lower(model.abstract_params(), jax.eval_shape(adamw_init, model.abstract_params()), model.input_specs(_shape()))
+        .compile()
+    )
+    tree = tree_from_compiled(compiled)
+    attn = tree.zoom("attention")
+    total = max(attn.total("flops"), 1e-9)
+    parts = []
+    for sub in ("qkv_proj", "scores", "chunk_scores", "pv", "chunk_pv", "out_proj", "rope"):
+        z = attn.zoom(sub)
+        if z.total("flops") / total > 0.005:
+            parts.append(f"{sub}={z.total('flops')/total:.2f}")
+    out.append(row("fig10_zoom_attention_qwen3", 0.0, ";".join(parts)))
+
+    # zoom 2: MoE internals
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    model = Model(cfg)
+    compiled = (
+        jax.jit(make_train_step(model, cosine_schedule(1e-3), AdamWConfig()))
+        .lower(model.abstract_params(), jax.eval_shape(adamw_init, model.abstract_params()), model.input_specs(_shape()))
+        .compile()
+    )
+    tree = tree_from_compiled(compiled)
+    moe = tree.zoom(lambda n: n == "moe" or n == "moe_ep")
+    total = max(moe.total("ops"), 1e-9)
+    parts = []
+    for sub in ("router", "dispatch", "experts", "combine", "shared_experts", "aux_loss"):
+        z = moe.zoom(sub)
+        if z.total("ops") / total > 0.005:
+            parts.append(f"{sub}={z.total('ops')/total:.2f}")
+    out.append(row("fig12_zoom_moe_deepseek", 0.0, ";".join(parts)))
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,60 @@
+"""§Roofline table: reads per-cell dry-run JSONs and emits the roofline CSV.
+
+One row per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS, the useful-FLOPs ratio, the step-time bound and the
+MFU at that bound. Sources preference: results/dryrun_optimized, falling back
+to results/dryrun_baseline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+RESULT_DIRS = ["results/dryrun_optimized", "results/dryrun_baseline"]
+
+
+def load_cells() -> list[dict]:
+    for d in RESULT_DIRS:
+        files = sorted(glob.glob(os.path.join(d, "*.json")))
+        if files:
+            return [json.load(open(f)) for f in files]
+    return []
+
+
+def main() -> list[str]:
+    cells = load_cells()
+    out = []
+    n_ok = n_skip = n_fail = 0
+    worst = None
+    for c in cells:
+        if c["status"] == "skip":
+            n_skip += 1
+            continue
+        if c["status"] != "ok":
+            n_fail += 1
+            continue
+        n_ok += 1
+        r = c["roofline"]
+        mfu = r["mfu_bound"]
+        if worst is None or mfu < worst[0]:
+            worst = (mfu, c)
+        out.append(
+            row(
+                f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}",
+                r["t_step_s"] * 1e6,
+                f"dominant={r['dominant']};t_comp={r['t_compute_s']:.3g};t_mem={r['t_memory_s']:.3g};"
+                f"t_coll={r['t_collective_s']:.3g};mfu_bound={mfu:.3f};"
+                f"useful_flops={r['useful_flops_ratio']:.2f};fits_hbm={r['fits_hbm']}",
+            )
+        )
+    out.append(row("roofline_summary", 0.0, f"ok={n_ok};skip_by_rule={n_skip};fail={n_fail}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

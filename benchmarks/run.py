@@ -1,0 +1,46 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring for
+the mapping to the paper's figures). Usage:
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig13      # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+BENCHES = [
+    ("fig01_engines", "benchmarks.fig01_engines"),
+    ("fig02_stack_depth", "benchmarks.fig02_stack_depth"),
+    ("fig08_11_breakdown", "benchmarks.fig08_11_breakdown"),
+    ("fig10_12_zoom", "benchmarks.fig10_12_zoom"),
+    ("fig13_detect", "benchmarks.fig13_detect"),
+    ("overhead", "benchmarks.overhead"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    filt = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modname in BENCHES:
+        if filt and filt not in name:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            for line in mod.main():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

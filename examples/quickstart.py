@@ -1,0 +1,81 @@
+"""Quickstart: train a tiny model with the profiling toolchain always on.
+
+Runs a few steps of a reduced qwen3-4b on CPU, with:
+  * the external host-plane sampler (the paper's perf_event analogue),
+  * the device-plane HLO component tree of the compiled train step,
+  * the dominance watchdog armed.
+
+Prints both breakdowns and writes the interactive HTML report.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (
+    DominanceDetector,
+    Rule,
+    SamplerConfig,
+    StackSampler,
+    WatchdogLoop,
+    breakdown,
+    tree_from_compiled,
+    write_report,
+)
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+
+
+def main(out_dir="/tmp/repro_quickstart", steps=8):
+    cfg = get_config("qwen3-4b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4))
+    step = jax.jit(
+        make_train_step(model, cosine_schedule(3e-3, warmup_steps=2, total_steps=steps), AdamWConfig()),
+        donate_argnums=(0, 1),
+    )
+
+    # --- profiling plane: external sampler + watchdog (zero instrumentation) ---
+    sampler = StackSampler(SamplerConfig(period_s=0.05))
+    detector = DominanceDetector([Rule(threshold=0.97, consecutive=3, min_window_total=8)])
+    watchdog = WatchdogLoop(sampler, detector, interval_s=0.5)
+    sampler.start()
+    watchdog.start()
+
+    # --- device plane: the compiled program IS the simulated architecture ----
+    batch0 = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    compiled = step.lower(params, opt, batch0).compile()
+    device_tree = tree_from_compiled(compiled)
+    print("\n=== device-plane FLOPs breakdown (compiled train step) ===")
+    for name, share in breakdown(device_tree, level=6, metric="flops", min_share=0.03):
+        print(f"  {share:6.1%}  {name.split('/')[-1]}")
+
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, metrics = step(params, opt, batch)
+        print(f"step {i}: loss={float(metrics['loss']):.4f}")
+
+    watchdog.stop()
+    host_tree = sampler.stop()
+    print("\n=== host-plane sample breakdown (external sampler) ===")
+    for name, share in breakdown(host_tree, level=3, min_share=0.05):
+        print(f"  {share:6.1%}  {name.split('/')[-1]}")
+    paths = write_report(host_tree, out_dir, "host_profile")
+    write_report(device_tree, out_dir, "device_profile", metric="flops")
+    print(f"\ninteractive reports: {paths['html']} and {out_dir}/device_profile.html")
+    print(f"anomalies: {[e.describe() for e in detector.events] or 'none'}")
+
+
+if __name__ == "__main__":
+    main()

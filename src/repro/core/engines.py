@@ -1,0 +1,137 @@
+"""Execution engines — the AS-CPU / TS-CPU / O3-CPU analogue (paper Fig. 1).
+
+The paper compares three simulator fidelities for the *same* workload and
+finds the cost ordering counter-intuitive (the "simple" TS-CPU is often no
+faster than the detailed O3). Our framework exposes the same experiment for
+the *same model*:
+
+* ``EagerEngine``     — op-by-op dispatch (``jax.disable_jit``): the simplest
+                        execution model, dominated by host bookkeeping frames,
+                        exactly as AS-CPU's runtime is dominated by functional
+                        Ruby plumbing rather than "architecture";
+* ``BlockwiseEngine`` — one ``jit`` per layer/block, Python loop between them:
+                        pays a host→device round-trip at every block boundary,
+                        the busy-wait analogue of TS-CPU's lockup cache;
+* ``CompiledEngine``  — a single ``jit`` (+ scan + donation): the most
+                        "detailed" compilation pipeline but the fastest
+                        execution, as O3 often is.
+
+All three run the same math; the sampler profiles each and the breakdown
+shows *where* the cost moved (dispatch vs compute), reproducing the paper's
+Fig. 1 methodology on our substrate. Benchmarked in ``benchmarks/fig01``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+
+@dataclass
+class EngineResult:
+    name: str
+    outputs: Any
+    wall_s: float
+    steps: int
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.steps / self.wall_s if self.wall_s > 0 else float("inf")
+
+
+class Engine:
+    name = "engine"
+
+    def run_step(self, *args, **kw):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def run(self, n_steps: int, make_args: Callable[[int], tuple]) -> EngineResult:
+        out = None
+        t0 = time.perf_counter()
+        for i in range(n_steps):
+            out = self.run_step(*make_args(i))
+        out = jax.block_until_ready(out)
+        return EngineResult(self.name, out, time.perf_counter() - t0, n_steps)
+
+
+class EagerEngine(Engine):
+    """Op-by-op dispatch: every primitive is dispatched individually."""
+
+    name = "eager"
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+
+    def run_step(self, *args, **kw):
+        with jax.disable_jit():
+            return self.fn(*args, **kw)
+
+
+class BlockwiseEngine(Engine):
+    """jit per stage, Python loop across stages (host sync at each boundary)."""
+
+    name = "blockwise"
+
+    def __init__(self, stages: Sequence[Callable], sync_between: bool = True):
+        self.stages = [jax.jit(s) for s in stages]
+        self.sync_between = sync_between
+
+    def run_step(self, carry, *extra):
+        for stage in self.stages:
+            carry = stage(carry, *extra)
+            if self.sync_between:
+                carry = jax.block_until_ready(carry)
+        return carry
+
+
+class CompiledEngine(Engine):
+    """Single end-to-end jit with optional donation."""
+
+    name = "compiled"
+
+    def __init__(self, fn: Callable, donate_argnums: tuple[int, ...] = (), **jit_kw):
+        self.fn = jax.jit(fn, donate_argnums=donate_argnums, **jit_kw)
+
+    def run_step(self, *args, **kw):
+        return self.fn(*args, **kw)
+
+
+def compare_engines(
+    engines: Sequence[Engine],
+    n_steps: int,
+    make_args: Callable[[int], tuple],
+    sampler_factory: Optional[Callable[[], Any]] = None,
+) -> list[dict]:
+    """Run each engine for ``n_steps`` under (optionally) a fresh sampler.
+
+    Returns per-engine dicts with throughput and top host-plane frames —
+    the data behind the Fig. 1 analogue.
+    """
+    rows = []
+    for eng in engines:
+        sampler = sampler_factory() if sampler_factory else None
+        if sampler:
+            sampler.start()
+        res = eng.run(n_steps, make_args)
+        tree = sampler.stop() if sampler else None
+        row = {
+            "engine": eng.name,
+            "steps": res.steps,
+            "wall_s": res.wall_s,
+            "steps_per_s": res.steps_per_s,
+        }
+        if tree is not None and tree.total() > 0:
+            flat = tree.flatten()
+            total = tree.total()
+            jax_frames = sum(v for k, v in flat.items() if k.startswith("jax::"))
+            repro_frames = sum(v for k, v in flat.items() if k.startswith("repro::"))
+            row["jax_frame_share"] = jax_frames / max(total, 1)
+            row["repro_frame_share"] = repro_frames / max(total, 1)
+            row["mean_depth"] = (
+                sum(d for _, d in sampler.depth_trace()) / max(len(sampler.depth_trace()), 1)
+            )
+        rows.append(row)
+    return rows

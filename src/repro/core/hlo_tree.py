@@ -1,0 +1,337 @@
+"""Device-plane call-tree: component attribution of the compiled XLA program.
+
+The paper's insight is that the simulator's call-stack reflects the simulated
+architecture. On TPU the "simulated architecture" is the compiled XLA program
+executing the model: the host cannot sample it, but every HLO instruction
+carries ``metadata={op_name="jit(step)/<module>/<submodule>/<op>"}`` — the
+``jax.named_scope`` call-path under which it was traced. That path *is* the
+call-stack of the compiled program, and we merge it into the very same
+:class:`~repro.core.calltree.CallTree`, with cost-model metrics as counters:
+
+* ``flops``      — matmul/conv FLOPs (2 * prod(out_dims) * prod(contract_dims));
+* ``bytes``      — memory traffic at fusion boundaries (operands + result; a
+                   post-fusion instruction is one kernel, so its boundary
+                   traffic approximates HBM traffic);
+* ``coll_bytes`` — operand bytes of every collective instruction
+                   (all-gather / all-reduce / reduce-scatter / all-to-all /
+                   collective-permute), the §Roofline collective term;
+* ``ops``        — instruction count (dominance denominators for the detector).
+
+``while`` bodies (``lax.scan`` over layers) are multiplied by their
+``known_trip_count`` from ``backend_config``, so a scanned 94-layer stack is
+attributed at full cost. All shapes in post-SPMD HLO are per-device shard
+shapes, so every metric here is **per device** — consistent with
+``compiled.cost_analysis()``.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .calltree import CallTree
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# Fusion-optimistic traffic model: only ops that stay HBM-visible on TPU are
+# charged bytes. Standalone elementwise/broadcast/reshape ops fuse into their
+# producers/consumers on TPU (the CPU backend leaves many unfused, which would
+# wildly overstate the memory term), so they are NOT in this set.
+_TRAFFIC_OPS = {
+    "dot",
+    "convolution",
+    "fusion",
+    "custom-call",
+    "copy",
+    "copy-start",
+    "transpose",
+    "reduce",
+    "reduce-window",
+    "sort",
+    "gather",
+    "scatter",
+    "dynamic-slice",
+    "dynamic-update-slice",
+    "pad",
+    "concatenate",
+    "slice",
+    "select-and-scatter",
+    "cholesky",
+    "triangular-solve",
+    "fft",
+    *COLLECTIVE_OPS,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# NOTE: tuple types embed `/*index=N*/` comments (with '=') every 5 elements,
+# so the tuple alternative must only exclude parens, not '='.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<opcode>[\w\-]+)\((?P<rest>.*)$"
+)
+_COMP_HEADER_RE = re.compile(r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_METADATA_RE = re.compile(r'op_name="([^"]+)"')
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+@dataclass
+class HloOp:
+    name: str
+    opcode: str
+    shapes: list[tuple[str, tuple[int, ...]]]  # result (flattened if tuple)
+    operands: list[str]
+    op_name: Optional[str]
+    trip_count: int = 1
+    called: list[str] = field(default_factory=list)
+    attrs: str = ""
+
+    def result_bytes(self) -> int:
+        total = 0
+        for dtype, dims in self.shapes:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES.get(dtype, 4)
+        return total
+
+
+@dataclass
+class HloComputation:
+    name: str
+    ops: dict[str, HloOp] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(x) for x in m.group(2).split(",") if x != "")
+        out.append((m.group(1), dims))
+    return out
+
+
+def parse_hlo_module(text: str) -> dict[str, HloComputation]:
+    """Parse post-optimization HLO text into computations with a symbol table."""
+    comps: dict[str, HloComputation] = {}
+    current: Optional[HloComputation] = None
+    entry_name: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if current is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m and not line.startswith("HloModule"):
+                current = HloComputation(m.group("name"))
+                if m.group("entry"):
+                    entry_name = current.name
+            continue
+        if stripped == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        rest = m.group("rest")
+        # Operand list ends at the first unnested ')'.
+        depth = 0
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        operand_str, attrs = rest[:end], rest[end + 1:]
+        operands = re.findall(r"%?([\w.\-]+)", operand_str)
+        # Keep only tokens that look like op names (filter literals like "0").
+        operands = [o for o in operands if not re.fullmatch(r"[0-9.eE+\-]+", o)]
+        mmeta = _METADATA_RE.search(attrs)
+        mtrip = _TRIP_RE.search(attrs)
+        called = _CALLS_RE.findall(attrs)
+        op = HloOp(
+            name=m.group("name"),
+            opcode=m.group("opcode"),
+            shapes=_parse_shapes(m.group("type")),
+            operands=operands,
+            op_name=mmeta.group(1) if mmeta else None,
+            trip_count=int(mtrip.group(1)) if mtrip else 1,
+            called=called,
+            attrs=attrs,
+        )
+        current.ops[op.name] = op
+        current.order.append(op.name)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(op: HloOp, comp: HloComputation) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dim sizes)."""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 0.0
+    lhs = comp.ops.get(op.operands[0])
+    if lhs is None or not lhs.shapes:
+        return 0.0
+    lhs_dims = lhs.shapes[0][1]
+    contract = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    out_elems = 1
+    for _, dims in op.shapes[:1]:
+        for d in dims:
+            out_elems *= d
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: HloOp, comp: HloComputation) -> float:
+    if not op.operands or len(op.operands) < 2:
+        return 0.0
+    rhs = comp.ops.get(op.operands[1])
+    if rhs is None or not rhs.shapes:
+        return 0.0
+    kernel_elems = 1
+    for d in rhs.shapes[0][1]:
+        kernel_elems *= d
+    out_elems = 1
+    for _, dims in op.shapes[:1]:
+        for d in dims:
+            out_elems *= d
+    # 2 * out_elems * (kernel / out_features): approximation adequate for stubs.
+    return 2.0 * out_elems * kernel_elems
+
+
+def build_device_tree(
+    hlo_text: str,
+    *,
+    entry: Optional[str] = None,
+    step_name: Optional[str] = None,
+) -> CallTree:
+    """Build the device-plane CallTree from compiled HLO text."""
+    comps = parse_hlo_module(hlo_text)
+    if not comps:
+        return CallTree()
+    if entry is None:
+        if "__entry__" in comps:
+            entry = comps["__entry__"].name
+        else:
+            # Fallback: the computation no other computation calls.
+            called_names = {c for comp in comps.values() for op in comp.ops.values() for c in op.called}
+            candidates = [n for n in comps if n != "__entry__" and n not in called_names]
+            entry = candidates[-1] if candidates else next(iter(comps))
+    tree = CallTree()
+
+    def op_path(op: HloOp) -> list[str]:
+        if op.op_name:
+            frames = [f for f in op.op_name.split("/") if f]
+            if step_name and frames and frames[0].startswith("jit("):
+                frames[0] = step_name
+            return frames + [op.opcode]
+        return ["<unattributed>", op.opcode]
+
+    def visit(comp_name: str, multiplier: float, seen: tuple[str, ...]) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        for name in comp.order:
+            op = comp.ops[name]
+            metrics = {"ops": 1.0 * multiplier}
+            if op.opcode == "dot":
+                metrics["flops"] = _dot_flops(op, comp) * multiplier
+            elif op.opcode == "convolution":
+                metrics["flops"] = _conv_flops(op, comp) * multiplier
+            if op.opcode in _TRAFFIC_OPS:
+                # In-place semantics for indexed ops (TPU aliases while-loop
+                # buffers; charging the full operand per iteration would be a
+                # CPU-backend artifact): slice/gather move ~2x the slice;
+                # dynamic-update-slice/scatter move ~2x the update operand;
+                # in-loop copies are CPU aliasing artifacts and are skipped.
+                if op.opcode in ("dynamic-slice", "gather"):
+                    metrics["bytes"] = 2 * op.result_bytes() * multiplier
+                elif op.opcode in ("dynamic-update-slice", "scatter"):
+                    upd_idx = 1 if op.opcode == "dynamic-update-slice" else 2
+                    upd = comp.ops.get(op.operands[upd_idx]) if len(op.operands) > upd_idx else None
+                    moved = upd.result_bytes() if upd is not None else op.result_bytes()
+                    metrics["bytes"] = 2 * moved * multiplier
+                elif op.opcode == "copy":
+                    if multiplier <= 1:
+                        metrics["bytes"] = 2 * op.result_bytes() * multiplier
+                else:
+                    operand_bytes = 0
+                    for o in op.operands:
+                        src = comp.ops.get(o)
+                        if src is not None:
+                            operand_bytes += src.result_bytes()
+                    metrics["bytes"] = (op.result_bytes() + operand_bytes) * multiplier
+            if op.opcode in COLLECTIVE_OPS:
+                operand_bytes = 0
+                for o in op.operands:
+                    src = comp.ops.get(o)
+                    if src is not None:
+                        operand_bytes += src.result_bytes()
+                metrics["coll_bytes"] = operand_bytes * multiplier
+                metrics[f"coll_bytes::{op.opcode}"] = operand_bytes * multiplier
+            tree.add_stack(op_path(op), metrics)
+            if op.opcode == "while":
+                body = _BODY_RE.search(op.attrs)
+                if body:
+                    visit(body.group(1), multiplier * op.trip_count, seen + (comp_name,))
+            elif op.opcode in ("call", "conditional", "async-start"):
+                for c in op.called:
+                    visit(c, multiplier, seen + (comp_name,))
+            # fusions are NOT descended into: one fusion == one kernel, and its
+            # boundary traffic is already counted above.
+    visit(entry, 1.0, ())
+    return tree
+
+
+def collective_summary(tree: CallTree) -> dict[str, float]:
+    """Total collective bytes per collective kind + overall (per device)."""
+    out: dict[str, float] = {"total": tree.total("coll_bytes")}
+    for k, v in tree.root.metrics.items():
+        if k.startswith("coll_bytes::"):
+            out[k.split("::", 1)[1]] = v
+    return out
+
+
+def tree_from_compiled(compiled, **kw) -> CallTree:
+    """Convenience: build the device tree straight from a jax compiled object."""
+    return build_device_tree(compiled.as_text(), **kw)
+
+
+def save_device_tree(tree: CallTree, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(tree.to_json())
+
+
+def load_device_tree(path: str) -> CallTree:
+    with open(path) as f:
+        return CallTree.from_json(f.read())

@@ -1,0 +1,150 @@
+"""Interactive HTML/JSON report export (paper §III-D "call-stack analyzer").
+
+The paper exports the merged call tree as an interactive HTML/JSON report with
+expand/collapse navigation. We emit a dependency-free standalone HTML page
+(nested ``<details>`` elements + share bars) plus the raw JSON tree, and a
+parser-config mechanism mirroring the artifact's 125 exploration configs:
+each :class:`ViewConfig` selects a root, a fold level, white/blacklists and a
+metric, and renders either HTML or CSV.
+"""
+
+from __future__ import annotations
+
+import html
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .calltree import SAMPLES, CallNode, CallTree
+
+_PAGE = """<!DOCTYPE html>
+<html><head><meta charset="utf-8"><title>{title}</title>
+<style>
+ body {{ font-family: ui-monospace, monospace; background:#111; color:#ddd; margin:1.5em; }}
+ details {{ margin-left: 1.2em; border-left: 1px solid #333; padding-left: .4em; }}
+ summary {{ cursor: pointer; white-space: nowrap; }}
+ .bar {{ display:inline-block; height:.7em; background:#4a8; margin-right:.5em; vertical-align:middle; }}
+ .pct {{ color:#8cf; }} .self {{ color:#fa6; }} .name {{ color:#eee; }}
+ .controls {{ margin-bottom:1em; }}
+ button {{ background:#222; color:#ddd; border:1px solid #444; padding:.3em .8em; cursor:pointer; }}
+</style></head>
+<body>
+<h2>{title}</h2>
+<div class="controls">
+ <button onclick="document.querySelectorAll('details').forEach(d=>d.open=true)">expand all</button>
+ <button onclick="document.querySelectorAll('details').forEach(d=>d.open=false)">collapse all</button>
+ metric: <b>{metric}</b> &nbsp; total: <b>{total:.6g}</b>
+</div>
+{body}
+<script type="application/json" id="calltree-json">{json_blob}</script>
+</body></html>
+"""
+
+
+def _node_html(node: CallNode, total: float, metric: str, depth: int, max_depth: int) -> str:
+    val = node.metrics.get(metric, 0.0)
+    share = val / total if total else 0.0
+    selfv = node.self_metrics.get(metric, 0.0)
+    bar = f'<span class="bar" style="width:{max(1, int(share * 240))}px"></span>'
+    label = (
+        f'{bar}<span class="pct">{share:6.2%}</span> '
+        f'<span class="name">{html.escape(node.name)}</span> '
+        f'<span class="self">(self {selfv:.4g})</span>'
+    )
+    kids = sorted(node.children.values(), key=lambda c: -c.metrics.get(metric, 0.0))
+    if not kids or (max_depth >= 0 and depth >= max_depth):
+        return f"<div>&nbsp;&nbsp;{label}</div>\n"
+    inner = "".join(_node_html(c, total, metric, depth + 1, max_depth) for c in kids)
+    return f"<details{' open' if depth < 2 else ''}><summary>{label}</summary>\n{inner}</details>\n"
+
+
+def render_html(tree: CallTree, title: str = "repro call-tree", metric: str = SAMPLES, max_depth: int = -1) -> str:
+    total = max(tree.total(metric), 1e-12)
+    body = "".join(
+        _node_html(c, total, metric, 0, max_depth)
+        for c in sorted(tree.root.children.values(), key=lambda c: -c.metrics.get(metric, 0.0))
+    )
+    return _PAGE.format(
+        title=html.escape(title),
+        metric=html.escape(metric),
+        total=tree.total(metric),
+        body=body,
+        json_blob=tree.to_json(),
+    )
+
+
+def write_report(tree: CallTree, out_dir: str, name: str, metric: str = SAMPLES) -> dict[str, str]:
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {
+        "html": os.path.join(out_dir, f"{name}.html"),
+        "json": os.path.join(out_dir, f"{name}.json"),
+    }
+    with open(paths["html"], "w") as f:
+        f.write(render_html(tree, title=name, metric=metric))
+    with open(paths["json"], "w") as f:
+        f.write(tree.to_json(indent=1))
+    return paths
+
+
+@dataclass
+class ViewConfig:
+    """One exploration config (artifact §G): root, fold level, filters."""
+
+    name: str = "view"
+    root: Optional[str] = None  # zoom selector (substring of a node name)
+    level: int = -1  # -1 expands to leaves, n truncates (artifact semantics)
+    metric: str = SAMPLES
+    whitelist: Optional[list[str]] = None
+    blacklist: Optional[list[str]] = None
+    min_share: float = 0.0
+
+    def apply(self, tree: CallTree) -> CallTree:
+        t = tree
+        if self.root:
+            t = t.zoom(lambda n, r=self.root: r in n)
+        if self.whitelist or self.blacklist:
+            t = t.filtered(self.whitelist, self.blacklist)
+        if self.level >= 0:
+            t = t.levels(self.level)
+        return t
+
+    def to_csv(self, tree: CallTree) -> str:
+        t = self.apply(tree)
+        total = max(t.total(self.metric), 1e-12)
+        rows = [f"# view={self.name} metric={self.metric} total={total:.6g}", "path,value,share"]
+        for path, node in t.root.walk():
+            if node is t.root:
+                continue
+            v = node.metrics.get(self.metric, 0.0)
+            if v / total >= self.min_share:
+                rows.append(f"{'/'.join(path[1:])},{v:.6g},{v / total:.4f}")
+        return "\n".join(rows)
+
+
+def breakdown(tree: CallTree, level: int = 1, metric: str = SAMPLES, min_share: float = 0.005) -> list[tuple[str, float]]:
+    """Top-level share table — what the paper's stacked-bar figures plot."""
+    t = tree.levels(level)
+    total = max(t.total(metric), 1e-12)
+    out = []
+
+    def rec(node: CallNode, prefix: str) -> None:
+        for c in sorted(node.children.values(), key=lambda c: -c.metrics.get(metric, 0.0)):
+            share = c.metrics.get(metric, 0.0) / total
+            if share >= min_share:
+                out.append((f"{prefix}{c.name}", share))
+                rec(c, f"{prefix}{c.name}/")
+
+    rec(t.root, "")
+    return out
+
+
+def save_views(tree: CallTree, configs: list[ViewConfig], out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for cfg in configs:
+        p = os.path.join(out_dir, f"{cfg.name}.csv")
+        with open(p, "w") as f:
+            f.write(cfg.to_csv(tree))
+        written.append(p)
+    return written

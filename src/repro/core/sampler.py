@@ -1,0 +1,195 @@
+"""External sampling profiler — host plane (paper §III-D "profiler").
+
+The paper attaches a stand-alone helper *process* to gem5 via Linux
+``perf_event`` and periodically captures call-chains without instrumenting the
+target. The container-feasible JAX analogue keeps the same contract — the
+profiled code is never modified and never calls into the profiler — by running
+a dedicated helper *thread* that:
+
+* every ``period`` seconds snapshots **every** Python thread's stack via
+  ``sys._current_frames()`` (the target threads are fully unaware; CPython
+  publishes the frames, the helper walks them),
+* resolves "symbols" from code objects and classifies each frame by origin
+  (``repro``/``jax``/``numpy``/``py``), mirroring the paper's ELF symbol
+  resolution + its observation that ~20 frames of a typical gem5 stack are
+  pybind11 bookkeeping — here the analogous noise is jax dispatch/tracing,
+* merges each sample into a :class:`~repro.core.calltree.CallTree` on the fly,
+* records a ``(t, depth)`` timeline (paper Fig. 2),
+* optionally samples ``/proc/self`` cpu/rss (the paper's host-resource plane).
+
+A true out-of-process backend (py-spy / perf with ``PERF_COUNT_SW_CPU_CLOCK``)
+drops in by replacing :meth:`StackSampler._capture`; on a TPU pod each host
+runs its own sampler and the per-host trees are merged with
+``CallTree.merge`` at rendezvous (see ``launch/launcher.py``).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .calltree import SAMPLES, CallTree
+
+# Default matches the paper (§V-E): 0.5 s balances detail vs overhead.
+DEFAULT_PERIOD_S = 0.5
+
+
+def classify_frame(filename: str) -> str:
+    """Coarse symbol "origin" classification (paper: gem5 vs pybind vs libc)."""
+    if "/repro/" in filename or filename.endswith("repro"):
+        return "repro"
+    if "/jax/" in filename or "/jaxlib/" in filename:
+        return "jax"
+    if "/numpy/" in filename:
+        return "numpy"
+    return "py"
+
+
+def frame_symbol(frame) -> str:
+    code = frame.f_code
+    origin = classify_frame(code.co_filename)
+    return f"{origin}::{code.co_name}"
+
+
+@dataclass
+class SamplerConfig:
+    period_s: float = DEFAULT_PERIOD_S
+    max_depth: int = 256
+    # Collapse consecutive frames from these origins into one node — the
+    # paper's answer to "20 pybind frames bury the interesting ones".
+    collapse_origins: tuple[str, ...] = ()
+    record_timeline: bool = True
+    record_rusage: bool = True
+
+
+@dataclass
+class TimelinePoint:
+    t: float
+    depth: int
+    thread: str
+
+
+@dataclass
+class RusagePoint:
+    t: float
+    cpu_s: float
+    rss_bytes: int
+
+
+class StackSampler:
+    """Sampling-based, non-intrusive profiler for the host runtime."""
+
+    def __init__(self, config: Optional[SamplerConfig] = None):
+        self.config = config or SamplerConfig()
+        self.tree = CallTree()
+        self.timeline: list[TimelinePoint] = []
+        self.rusage: list[RusagePoint] = []
+        self.n_samples = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._t0 = time.monotonic()
+        self._psutil_proc = None
+        if self.config.record_rusage:
+            try:
+                import psutil
+
+                self._psutil_proc = psutil.Process(os.getpid())
+            except Exception:  # pragma: no cover - psutil is optional
+                self._psutil_proc = None
+
+    # -- capture -----------------------------------------------------------------
+
+    def _stack_of(self, frame) -> list[str]:
+        rev: list[str] = []
+        depth = 0
+        while frame is not None and depth < self.config.max_depth:
+            rev.append(frame_symbol(frame))
+            frame = frame.f_back
+            depth += 1
+        rev.reverse()  # root -> leaf
+        if self.config.collapse_origins:
+            collapsed: list[str] = []
+            for sym in rev:
+                origin = sym.split("::", 1)[0]
+                if origin in self.config.collapse_origins and collapsed and collapsed[-1] == f"{origin}::*":
+                    continue
+                collapsed.append(f"{origin}::*" if origin in self.config.collapse_origins else sym)
+            rev = collapsed
+        return rev
+
+    def _capture(self) -> None:
+        me = threading.get_ident()
+        names = {t.ident: t.name for t in threading.enumerate()}
+        now = time.monotonic() - self._t0
+        frames = sys._current_frames()
+        with self._lock:
+            for ident, frame in frames.items():
+                # Profiler infrastructure lives "outside the cgroup": neither
+                # the helper itself nor watchdog/report threads are profiled.
+                if ident == me or names.get(ident, "").startswith("repro-"):
+                    continue
+                stack = self._stack_of(frame)
+                tname = names.get(ident, f"tid{ident}")
+                self.tree.add_stack([f"thread::{tname}"] + stack)
+                if self.config.record_timeline:
+                    self.timeline.append(TimelinePoint(now, len(stack), tname))
+            self.n_samples += 1
+            if self._psutil_proc is not None:
+                try:
+                    cpu = self._psutil_proc.cpu_times()
+                    rss = self._psutil_proc.memory_info().rss
+                    self.rusage.append(RusagePoint(now, cpu.user + cpu.system, rss))
+                except Exception:
+                    pass
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.config.period_s):
+            try:
+                self._capture()
+            except Exception:
+                # The profiler must never take down the run it observes.
+                pass
+
+    # -- lifecycle ------------------------------------------------------------------
+
+    def start(self) -> "StackSampler":
+        if self._thread is not None:
+            raise RuntimeError("sampler already started")
+        self._t0 = time.monotonic()
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, name="repro-prof-helper", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> CallTree:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        return self.snapshot()
+
+    def __enter__(self) -> "StackSampler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- access -----------------------------------------------------------------------
+
+    def snapshot(self) -> CallTree:
+        """Thread-safe copy of the merged tree (detector windows use this)."""
+        with self._lock:
+            return self.tree.copy()
+
+    def sample_now(self) -> None:
+        """Force one synchronous sample (used by tests and the detector loop)."""
+        self._capture()
+
+    def depth_trace(self) -> list[tuple[float, int]]:
+        with self._lock:
+            return [(p.t, p.depth) for p in self.timeline]

@@ -1,0 +1,62 @@
+"""Predefined exploration views (artifact §G: the paper ships 125 parser
+configs — root function, fold level, white/blacklists, plot knobs).
+
+These are the curated equivalents for this framework's component vocabulary,
+usable against either profiling plane:
+
+    from repro.core.views_library import VIEWS, render_view
+    print(render_view(tree, "attention_internals", metric="flops"))
+
+Each view is a :class:`~repro.core.report.ViewConfig`; ``save_views`` writes
+the whole library as CSVs next to a run's reports.
+"""
+
+from __future__ import annotations
+
+from .calltree import CallTree
+from .report import ViewConfig
+
+VIEWS: dict[str, ViewConfig] = {
+    v.name: v
+    for v in [
+        # ---- holistic (zoom-out) --------------------------------------------------
+        ViewConfig(name="top_level", level=2),
+        ViewConfig(name="train_step_phases", root="train_step", level=2),
+        ViewConfig(name="serve_step_phases", root="serve_step", level=2),
+        ViewConfig(name="model_components", root="model", level=3),
+        # ---- per-component (zoom-in) ---------------------------------------------
+        ViewConfig(name="attention_internals", root="attention", level=-1),
+        ViewConfig(name="attention_scores_only", root="attention", whitelist=["scores", "chunk_scores"]),
+        ViewConfig(name="moe_internals", root="moe", level=2),
+        ViewConfig(name="moe_dispatch_combine", root="moe", whitelist=["dispatch", "combine", "a2a"]),
+        ViewConfig(name="recurrent_internals", root="recurrent_block", level=-1),
+        ViewConfig(name="rglru_scan", root="rg_lru", level=-1),
+        ViewConfig(name="mlstm_internals", root="mlstm", level=2),
+        ViewConfig(name="optimizer", root="optimizer", level=2),
+        ViewConfig(name="lm_head_and_loss", root="loss", level=2),
+        # ---- cost-specific -------------------------------------------------------
+        ViewConfig(name="collectives_by_site", metric="coll_bytes", level=-1, min_share=0.01),
+        ViewConfig(name="memory_traffic_hotspots", metric="bytes", level=6, min_share=0.02),
+        ViewConfig(name="flops_by_layer_stage", metric="flops", level=5, min_share=0.02),
+        # ---- host plane ----------------------------------------------------------
+        ViewConfig(name="host_threads", level=1),
+        ViewConfig(name="host_data_pipeline", root="_prefetch_worker", level=-1),
+        ViewConfig(name="host_dispatch_noise", whitelist=["jax::"], level=-1),
+        ViewConfig(name="host_checkpoint_writer", root="repro-ckpt", level=-1),
+        # ---- anomaly forensics (what the detector saw) ----------------------------
+        ViewConfig(name="dominant_leaves", level=-1, min_share=0.10),
+    ]
+}
+
+
+def render_view(tree: CallTree, name: str, metric: str | None = None) -> str:
+    cfg = VIEWS[name]
+    if metric is not None:
+        from dataclasses import replace
+
+        cfg = replace(cfg, metric=metric)
+    return cfg.to_csv(tree)
+
+
+def list_views() -> list[str]:
+    return sorted(VIEWS)

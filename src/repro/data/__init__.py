@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Pipeline, SyntheticLM
+
+__all__ = ["DataConfig", "Pipeline", "SyntheticLM"]

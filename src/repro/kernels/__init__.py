@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec tiling), a jit'd
+wrapper in ops.py, and a pure-jnp oracle in ref.py. TPU is the target; CPU
+validation runs the kernel bodies under interpret=True.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,61 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One HBM read + one HBM write per element: the row-wise mean-square reduction,
+rsqrt and scale multiply all happen in VMEM on a (Br, D) tile. XLA emits this
+as reduce + broadcast-multiply which it usually fuses anyway; the kernel
+exists because the *fp32-upcast* variant (bf16 in, fp32 statistics, bf16 out)
+otherwise materializes an fp32 copy of the activation in HBM at long sequence
+lengths. Grid is 1-D over row blocks; D stays whole on the lane axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (Br, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def fused_rmsnorm_pallas(
+    x: jax.Array,  # (..., D)
+    scale: jax.Array,  # (D,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    D = x.shape[-1]
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, D)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = ((rows + pad) // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x2, scale.reshape(1, D))
+    return out[:rows].reshape(orig_shape)

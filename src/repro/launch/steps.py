@@ -1,0 +1,82 @@
+"""Step-function builders shared by the trainer, server, dry-run and benches."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(
+    model: Model,
+    lr_fn: Callable,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    grad_accum: int = 1,
+):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_accum > 1`` scans over microbatches (leading batch dim must divide),
+    accumulating fp32 gradients — the standard memory/throughput knob.
+    """
+
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    def train_step(params, opt_state, batch):
+        with jax.named_scope("train_step"):
+            if grad_accum == 1:
+                with jax.named_scope("fwd_bwd"):
+                    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            else:
+                def micro(b):
+                    return jax.tree.map(
+                        lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]), b
+                    )
+
+                mb = micro(batch)
+
+                def body(carry, b):
+                    acc, loss_acc = carry
+                    (l, aux_i), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+                    acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+                    return (acc, loss_acc + l), aux_i
+
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                with jax.named_scope("fwd_bwd"):
+                    (gsum, lsum), auxs = jax.lax.scan(body, (zero, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+                loss = lsum / grad_accum
+                aux = jax.tree.map(lambda x: x[-1], auxs)
+            lr = lr_fn(opt_state["step"])
+            new_params, new_opt, om = adamw_update(grads, opt_state, params, lr=lr, cfg=opt_cfg)
+            metrics = {"loss": loss, "lr": lr, **aux, **om}
+            return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model, *, greedy: bool = True, temperature: float = 1.0):
+    """-> serve_step(params, batch, state, pos) -> (next_tokens|logits, state)."""
+
+    def serve_step(params, batch, state, pos):
+        with jax.named_scope("serve_step"):
+            logits, new_state = model.decode_step(params, batch, state, pos)
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_state
+            return logits / temperature, new_state
+
+    return serve_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        with jax.named_scope("eval_step"):
+            loss, aux = model.loss(params, batch)
+            return {"loss": loss, **aux}
+
+    return eval_step

@@ -1,0 +1,4 @@
+from .model import Model
+from .modules import ArraySpec, abstract_params, init_params, param_count
+
+__all__ = ["Model", "ArraySpec", "abstract_params", "init_params", "param_count"]

@@ -1,0 +1,34 @@
+"""Gated MLP (SwiGLU / GeGLU) and plain FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .modules import ACTIVATIONS, ArraySpec
+
+
+def mlp_spec(d_model: int, d_ff: int, *, gated: bool = True) -> dict:
+    spec = {
+        "wi": ArraySpec((d_model, d_ff), ("embed", "mlp")),
+        "wo": ArraySpec((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        spec["wg"] = ArraySpec((d_model, d_ff), ("embed", "mlp"))
+    return spec
+
+
+def mlp(params, x, *, act: str = "silu", scope: str = "mlp"):
+    """x: (..., d_model) -> (..., d_model). Gated when 'wg' is present."""
+    with jax.named_scope(scope):
+        f = ACTIVATIONS[act]
+        with jax.named_scope("up_proj"):
+            h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+        if "wg" in params:
+            with jax.named_scope("gate_proj"):
+                g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+            h = f(g) * h
+        else:
+            h = f(h)
+        with jax.named_scope("down_proj"):
+            return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))

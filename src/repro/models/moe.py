@@ -1,0 +1,118 @@
+"""Mixture-of-Experts: shared + routed experts, top-k, sort-based dispatch.
+
+DeepSeekMoE-style fine-grained experts: ``n_shared`` always-on experts plus
+``n_experts`` routed experts with top-k gating (softmax -> top-k -> renorm).
+
+Dispatch is **sort-based with static capacity** (TPU-friendly: all shapes
+static, no ragged ops):
+
+1. flatten tokens, route, take top-k -> (T*k) slots tagged with expert ids;
+2. ``argsort`` slots by expert id; rank-within-expert = position - first
+   occurrence of that expert in the sorted order (O(T*k log) total);
+3. slots with rank >= capacity are *dropped* (capacity_factor controls how
+   many); survivors scatter into a dense (E, C, D) buffer;
+4. one batched einsum per projection runs all experts: (E,C,D)x(E,D,F) —
+   this is the tensor the **EP** sharding rule shards over the 'model' axis;
+5. results scale by router weights and segment-add back to tokens.
+
+The (E,C,D) buffer is annotated with a sharding constraint so GSPMD places
+the token->expert exchange (all-to-all / gather) explicitly — visible in the
+device-plane tree and a first-class §Perf hillclimb target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import shard_activation
+
+from .modules import ACTIVATIONS, ArraySpec
+from .mlp import mlp, mlp_spec
+
+
+def moe_spec(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    spec = {
+        "router": {"w": ArraySpec((d, e), ("embed", "expert"), jnp.float32)},
+        "wi": ArraySpec((e, d, f), ("expert", "embed", "mlp")),
+        "wg": ArraySpec((e, d, f), ("expert", "embed", "mlp")),
+        "wo": ArraySpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        spec["shared"] = mlp_spec(d, cfg.n_shared_experts * cfg.moe_d_ff)
+    return spec
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    # round up to a multiple of 8 for lane-friendly layouts
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe(params, x, cfg, *, ep_constraint=None, scope: str = "moe"):
+    """x: (B, S, D) -> (B, S, D), aux dict with load-balance stats/loss.
+
+    ``ep_constraint`` (optional callable) applies a sharding constraint to the
+    (E, C, D) expert buffers — installed by the sharding layer.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = _capacity(T, cfg)
+    f = ACTIVATIONS[cfg.act]
+    with jax.named_scope(scope):
+        xt = x.reshape(T, D)
+        with jax.named_scope("router"):
+            logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"]["w"])
+            probs = jax.nn.softmax(logits, axis=-1)
+            gate_w, gate_ids = jax.lax.top_k(probs, K)  # (T,K)
+            gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)  # renorm over selected
+        with jax.named_scope("dispatch"):
+            flat_ids = gate_ids.reshape(-1)  # (T*K,)
+            order = jnp.argsort(flat_ids)  # stable
+            sorted_ids = flat_ids[order]
+            starts = jnp.searchsorted(sorted_ids, jnp.arange(E), side="left")
+            rank = jnp.arange(T * K) - starts[sorted_ids]
+            valid = rank < C
+            slot = jnp.where(valid, sorted_ids * C + rank, E * C)  # E*C == drop bucket
+            token_of_slot = order // K
+            # Keep the (T*K, D) slot tensor sharded over the data axis: without
+            # this constraint GSPMD replicates the gather output per device
+            # (profiler-identified memory term on qwen3-moe train, §Perf A.3).
+            slot_vals = shard_activation(xt[token_of_slot], ("batch", None))
+            buf = jnp.zeros((E * C, D), x.dtype)
+            buf = buf.at[slot].add(slot_vals, mode="drop")
+            buf = buf.reshape(E, C, D)
+            # EP: pin the expert buffer to the expert-parallel axis so the
+            # token->expert exchange is an explicit collective at this seam.
+            buf = shard_activation(buf, ("expert_buf", None, None))
+            if ep_constraint is not None:
+                buf = ep_constraint(buf)
+        with jax.named_scope("experts"):
+            h = jnp.einsum("ecd,edf->ecf", buf, params["wi"].astype(x.dtype))
+            g = jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(x.dtype))
+            h = f(g) * h
+            y_e = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(x.dtype))
+            y_e = shard_activation(y_e, ("expert_buf", None, None))
+            if ep_constraint is not None:
+                y_e = ep_constraint(y_e)
+        with jax.named_scope("combine"):
+            y_slots = y_e.reshape(E * C, D)
+            gathered = jnp.where(valid[:, None], y_slots[jnp.clip(slot, 0, E * C - 1)], 0.0)
+            gathered = shard_activation(gathered, ("batch", None))
+            w_sorted = gate_w.reshape(-1)[order]
+            contrib = gathered * w_sorted[:, None].astype(x.dtype)
+            y = jnp.zeros((T, D), x.dtype).at[token_of_slot].add(contrib)
+            y = shard_activation(y, ("batch", None))
+        if cfg.n_shared_experts:
+            y = y + mlp(params["shared"], xt, act=cfg.act, scope="shared_experts")
+        with jax.named_scope("aux_loss"):
+            # Switch-style load balancing: E * sum_e fraction_e * prob_e
+            counts = jnp.zeros((E,), jnp.float32).at[flat_ids].add(1.0)
+            frac = counts / (T * K)
+            mean_prob = probs.mean(0)
+            lb_loss = E * jnp.sum(frac * mean_prob)
+            dropped = 1.0 - valid.sum() / (T * K)
+        aux = {"lb_loss": lb_loss, "dropped_frac": dropped, "expert_frac": frac}
+        return y.reshape(B, S, D), aux

@@ -1,0 +1,123 @@
+"""Expert-parallel MoE via shard_map + explicit all-to-all (§Perf cell A).
+
+The pjit dense-dispatch MoE (``moe.py``) is correct but GSPMD lowers its
+indexed scatter/gather across a model-sharded buffer as *full-tensor
+all-reduces* — the device-plane profiler measured 94% of qwen3-moe's
+collective bytes there. This implementation is the classic GShard/Switch
+layout, written explicitly:
+
+  per data-shard (pure batch parallelism), per model-rank (E_loc experts):
+    1. route the local T_loc tokens (router weights replicated — they are
+       D x E, trivially small);
+    2. scatter tokens into a *local* (E, C_s, D) dispatch buffer
+       (C_s = per-source-shard capacity) — no collective;
+    3. reshape to (n_model, E_loc, C_s, D) and ``all_to_all`` over the model
+       axis — each rank receives exactly the tokens bound for ITS experts:
+       moved bytes = T_loc * k * cf * D, the information-theoretic minimum;
+    4. run the expert FFN on (E_loc, n_model * C_s, D) with local weights;
+    5. reverse all_to_all; gather + weighted scatter-add back to tokens —
+       again local.
+
+Same parameters, same routing math, same capacity/dropping semantics as the
+dense path (cross-checked by tests on a multi-device CPU mesh).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .modules import ACTIVATIONS
+from .mlp import mlp
+
+
+def _local_capacity(t_loc: int, cfg) -> int:
+    c = int(t_loc * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, (c + 3) // 4 * 4)
+
+
+def moe_shard_map(params, x, cfg, *, mesh, data_axes: tuple[str, ...], scope: str = "moe_ep"):
+    """x: (B, S, D) batch-sharded over ``data_axes``; experts over 'model'."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    n_model = mesh.shape["model"]
+    E_loc = E // n_model
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    T_loc = T // n_data
+    C_s = _local_capacity(T_loc, cfg)
+    f = ACTIVATIONS[cfg.act]
+
+    def local_moe(xt, router_w, wi, wg, wo):
+        # xt: (T_loc, D) f32/bf16; router_w: (D, E); wi/wg: (E_loc, D, F); wo: (E_loc, F, D)
+        axis = "model"
+        with jax.named_scope("router"):
+            logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router_w)
+            probs = jax.nn.softmax(logits, axis=-1)
+            gate_w, gate_ids = jax.lax.top_k(probs, K)
+            gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        with jax.named_scope("local_dispatch"):
+            flat_ids = gate_ids.reshape(-1)
+            order = jnp.argsort(flat_ids)
+            sorted_ids = flat_ids[order]
+            starts = jnp.searchsorted(sorted_ids, jnp.arange(E), side="left")
+            rank = jnp.arange(T_loc * K) - starts[sorted_ids]
+            valid = rank < C_s
+            slot = jnp.where(valid, sorted_ids * C_s + rank, E * C_s)
+            token_of_slot = order // K
+            buf = jnp.zeros((E * C_s, D), xt.dtype)
+            buf = buf.at[slot].add(xt[token_of_slot], mode="drop")
+            buf = buf.reshape(n_model, E_loc, C_s, D)
+        with jax.named_scope("a2a_dispatch"):
+            # send axis-0 block g to model-rank g; receive my experts' tokens.
+            # recv[j] = source j's block for MY experts: (n_src, E_loc, C_s, D)
+            recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=True)
+            recv = jnp.moveaxis(recv, 0, 1).reshape(E_loc, n_model * C_s, D)
+        with jax.named_scope("experts"):
+            h = jnp.einsum("ecd,edf->ecf", recv, wi.astype(xt.dtype))
+            g = jnp.einsum("ecd,edf->ecf", recv, wg.astype(xt.dtype))
+            y_e = jnp.einsum("ecf,efd->ecd", f(g) * h, wo.astype(xt.dtype))
+        with jax.named_scope("a2a_combine"):
+            back = jnp.moveaxis(y_e.reshape(E_loc, n_model, C_s, D), 1, 0)
+            back = jax.lax.all_to_all(back, axis, split_axis=0, concat_axis=0, tiled=True)
+            y_slots = back.reshape(E * C_s, D)
+        with jax.named_scope("local_combine"):
+            gathered = jnp.where(valid[:, None], y_slots[jnp.clip(slot, 0, E * C_s - 1)], 0.0)
+            w_sorted = gate_w.reshape(-1)[order]
+            y = jnp.zeros((T_loc, D), xt.dtype).at[token_of_slot].add(
+                gathered * w_sorted[:, None].astype(xt.dtype)
+            )
+        with jax.named_scope("aux_loss"):
+            counts = jnp.zeros((E,), jnp.float32).at[flat_ids].add(1.0)
+            counts = jax.lax.psum(counts, data_axes)
+            frac = counts / (T * K)
+            mean_prob = jax.lax.pmean(probs.mean(0), data_axes)
+            lb_loss = E * jnp.sum(frac * mean_prob)
+            dropped = 1.0 - jax.lax.psum(valid.sum(), data_axes) / (T * K)
+        return y, lb_loss, dropped, frac
+
+    with jax.named_scope(scope):
+        xt = x.reshape(T, D)
+        specs_in = (
+            P(data_axes, None),        # xt
+            P(),                       # router (replicated)
+            P("model", None, None),    # wi
+            P("model", None, None),    # wg
+            P("model", None, None),    # wo
+        )
+        specs_out = (P(data_axes, None), P(), P(), P())
+        y, lb, dropped, frac = shard_map(
+            local_moe,
+            mesh=mesh,
+            in_specs=specs_in,
+            out_specs=specs_out,
+            check_rep=False,
+        )(xt, params["router"]["w"], params["wi"], params["wg"], params["wo"])
+        if cfg.n_shared_experts:
+            y = y + mlp(params["shared"], xt, act=cfg.act, scope="shared_experts")
+        aux = {"lb_loss": lb, "dropped_frac": dropped, "expert_frac": frac}
+        return y.reshape(B, S, D), aux

@@ -1,0 +1,13 @@
+from .ctx import clear_sharding_ctx, set_sharding_ctx, shard_activation, sharding_ctx
+from .rules import Strategy, make_strategy, params_shardings, spec_for
+
+__all__ = [
+    "clear_sharding_ctx",
+    "set_sharding_ctx",
+    "shard_activation",
+    "sharding_ctx",
+    "Strategy",
+    "make_strategy",
+    "params_shardings",
+    "spec_for",
+]

@@ -1,0 +1,71 @@
+"""Thread-local sharding context.
+
+Model code never mentions mesh axes: it annotates activations with *logical*
+axes (``shard_activation(x, ("batch", None, None))``). The launcher installs a
+context mapping logical -> mesh axes; outside any context the call is an
+identity, so smoke tests and single-device runs are untouched.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_tls = threading.local()
+
+
+def set_sharding_ctx(mesh, act_rules: dict[str, object]) -> None:
+    _tls.mesh = mesh
+    _tls.act_rules = dict(act_rules)
+
+
+def clear_sharding_ctx() -> None:
+    _tls.mesh = None
+    _tls.act_rules = None
+
+
+def current_sharding_ctx():
+    """-> (mesh, act_rules) or (None, None) when no context is installed."""
+    return getattr(_tls, "mesh", None), getattr(_tls, "act_rules", None)
+
+
+@contextmanager
+def sharding_ctx(mesh, act_rules: dict[str, object]):
+    prev = (getattr(_tls, "mesh", None), getattr(_tls, "act_rules", None))
+    set_sharding_ctx(mesh, act_rules)
+    try:
+        yield
+    finally:
+        _tls.mesh, _tls.act_rules = prev
+
+
+def shard_activation(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    """Apply a sharding constraint if a context is installed; else identity."""
+    mesh = getattr(_tls, "mesh", None)
+    rules = getattr(_tls, "act_rules", None)
+    if mesh is None or rules is None:
+        return x
+    axes = []
+    used: set[str] = set()
+    for name in logical_axes:
+        mapped = rules.get(name) if name else None
+        if mapped is None:
+            axes.append(None)
+            continue
+        mapped_t = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        # never reuse a mesh axis within one spec; verify divisibility
+        mapped_t = tuple(m for m in mapped_t if m not in used)
+        dim = x.shape[len(axes)]
+        size = 1
+        for m in mapped_t:
+            size *= mesh.shape[m]
+        if mapped_t and size and dim % size == 0:
+            axes.append(mapped_t if len(mapped_t) > 1 else mapped_t[0])
+            used.update(mapped_t)
+        else:
+            axes.append(None)
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(mesh, P(*axes)))

@@ -1,0 +1,140 @@
+"""Logical-axis -> mesh-axis rules (MaxText-style), per parallelism strategy.
+
+A :class:`Strategy` maps each *logical* parameter axis (``"embed"``,
+``"mlp"``, ``"q_heads"``, ``"expert"``, ...) to zero or more mesh axes, plus
+activation rules (``"batch"`` -> ``("pod","data")``). ``spec_for`` resolves an
+:class:`~repro.models.modules.ArraySpec` into a ``PartitionSpec``, enforcing:
+
+* divisibility — a dim that does not divide by its mesh-axes product falls
+  back to replication for that dim (e.g. 8 KV heads on a 16-way model axis:
+  KV weights replicate across TP, the Megatron GQA convention);
+* uniqueness — a mesh axis is used at most once per spec (first logical axis
+  in declaration order wins).
+
+Strategies are plain data: §Perf hillclimbs by swapping rule tables, never by
+touching model code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.modules import ArraySpec, is_spec
+
+AxisMap = dict[str, Union[str, tuple[str, ...], None]]
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    param_rules: AxisMap
+    act_rules: AxisMap
+    # logical axes whose sharding is load-bearing (EP experts etc.) — checked
+    # by tests so a silent fallback cannot drop them.
+    required: tuple[str, ...] = ()
+
+    def mesh_axes_for(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        m = self.param_rules.get(logical)
+        if m is None:
+            return ()
+        return (m,) if isinstance(m, str) else tuple(m)
+
+
+def spec_for(aspec: ArraySpec, strategy: Strategy, mesh) -> P:
+    axes: list = []
+    used: set[str] = set()
+    for dim, logical in zip(aspec.shape, aspec.logical):
+        mapped = tuple(m for m in strategy.mesh_axes_for(logical) if m not in used)
+        size = 1
+        for m in mapped:
+            size *= mesh.shape[m]
+        if mapped and size > 1 and dim % size == 0:
+            axes.append(mapped if len(mapped) > 1 else mapped[0])
+            used.update(mapped)
+        else:
+            axes.append(None)
+    return P(*axes)
+
+
+def params_shardings(spec_tree, strategy: Strategy, mesh):
+    """NamedSharding pytree matching a params spec tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s, strategy, mesh)),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+
+def make_strategy(
+    name: str,
+    *,
+    multi_pod: bool = False,
+    fsdp_over_pod: bool = True,
+) -> Strategy:
+    """Build a strategy preset for the production mesh.
+
+    Presets:
+      tp_fsdp  — TP over 'model' for wide axes (vocab/mlp/heads/experts),
+                 FSDP (ZeRO-3) over 'data' (+'pod' when multi_pod and
+                 fsdp_over_pod) for the embed axis; batch over (pod, data).
+      tp_only  — TP over 'model'; weights otherwise replicated (pure DP+TP).
+      fsdp_only— ZeRO-3 without TP (all wide axes replicated).
+      ddp      — pure data parallelism (all weights replicated).
+    """
+    fsdp: tuple[str, ...] = ("data",)
+    batch: tuple[str, ...] = ("data",)
+    if multi_pod:
+        batch = ("pod", "data")
+        if fsdp_over_pod:
+            fsdp = ("pod", "data")
+    common_acts: AxisMap = {"batch": batch, "expert_buf": "model", "ctx_chunk": "model"}
+    if name == "tp_fsdp":
+        return Strategy(
+            name,
+            param_rules={
+                "vocab": "model",
+                "mlp": "model",
+                "q_heads": "model",
+                "kv_heads": "model",
+                "expert": "model",
+                "state_out": "model",
+                "embed": fsdp,
+                "state": fsdp,
+            },
+            act_rules=common_acts,
+            required=("expert",),
+        )
+    if name == "tp_only":
+        return Strategy(
+            name,
+            param_rules={
+                "vocab": "model",
+                "mlp": "model",
+                "q_heads": "model",
+                "kv_heads": "model",
+                "expert": "model",
+                "state_out": "model",
+            },
+            act_rules=common_acts,
+            required=("expert",),
+        )
+    if name == "fsdp_only":
+        return Strategy(
+            name,
+            param_rules={"embed": fsdp, "state": fsdp, "expert": "model"},
+            act_rules=common_acts,
+        )
+    if name == "ddp":
+        return Strategy(name, param_rules={}, act_rules={"batch": batch})
+    raise ValueError(f"unknown strategy {name}")

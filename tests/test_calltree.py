@@ -1,0 +1,209 @@
+"""Call-tree semantics tests, including the paper's Figure 7 example verbatim."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CallTree
+
+
+def make_fig7_tree():
+    """Paper Fig. 7: samples a1->b1->c->e1 and a2->b2->d->f->e2.
+
+    Shared prefix a->b merges (counters a1+a2, b1+b2); after the split the
+    same callee e reached from c vs f stays a distinct call-site.
+    """
+    t = CallTree()
+    t.add_stack(["a", "b", "c", "e"])  # a1->b1->c->e1
+    t.add_stack(["a", "b", "d", "f", "e"])  # a2->b2->d->f->e2
+    return t
+
+
+class TestFigure7:
+    def test_prefix_merge_counters(self):
+        t = make_fig7_tree()
+        a = t.root.children["a"]
+        b = a.children["b"]
+        assert a.metrics["samples"] == 2  # a1+a2
+        assert b.metrics["samples"] == 2  # b1+b2
+        assert set(b.children) == {"c", "d"}
+
+    def test_distinct_call_sites_for_same_callee(self):
+        t = make_fig7_tree()
+        b = t.root.children["a"].children["b"]
+        e_via_c = b.children["c"].children["e"]
+        e_via_f = b.children["d"].children["f"].children["e"]
+        assert e_via_c is not e_via_f
+        assert e_via_c.metrics["samples"] == 1
+        assert e_via_f.metrics["samples"] == 1
+
+    def test_flattened_view_merges_identical_names(self):
+        t = make_fig7_tree()
+        flat = t.flatten()
+        assert flat["a"] == 2 and flat["b"] == 2
+        assert flat["e"] == 2  # e1+e2 merged in the flattened view
+        assert flat["c"] == 1 and flat["d"] == 1 and flat["f"] == 1
+
+    def test_three_level_view_folds_deep_nodes(self):
+        """Paper: in the 3-level view, e1 folds into c; f and e2 fold into d."""
+        t = make_fig7_tree()
+        v = t.levels(3)
+        b = v.root.children["a"].children["b"]
+        c, d = b.children["c"], b.children["d"]
+        assert not c.children and not d.children
+        # Folding preserves inclusive counters.
+        assert c.metrics["samples"] == 1 and d.metrics["samples"] == 1
+        assert c.self_metrics["samples"] == 1  # e1 aggregated into c
+        assert d.self_metrics["samples"] == 1  # f+e2 aggregated into d
+
+    def test_zoom_reroots_and_merges(self):
+        t = make_fig7_tree()
+        z = t.zoom("e")
+        assert z.total() == 2  # both e call-sites merged under the new root
+        assert set(z.root.children) == {"e"}
+
+    def test_level_minus_one_is_full_tree(self):
+        t = make_fig7_tree()
+        assert t.levels(-1).to_json() == t.to_json()
+
+
+class TestViews:
+    def test_blacklist_removes_subtree(self):
+        t = make_fig7_tree()
+        f = t.filtered(blacklist=["d"])
+        b = f.root.children["a"].children["b"]
+        assert "d" not in b.children and "c" in b.children
+
+    def test_whitelist_keeps_matching_paths(self):
+        t = make_fig7_tree()
+        f = t.filtered(whitelist=["f"])
+        b = f.root.children["a"].children["b"]
+        assert "c" not in b.children
+        assert "f" in b.children["d"].children
+
+    def test_shares_and_hot_paths(self):
+        t = make_fig7_tree()
+        shares = t.shares()
+        assert shares[("a",)] == 1.0
+        hot = t.hot_paths(k=2)
+        assert all(0 < s <= 1 for _, s in hot)
+
+    def test_render_and_depth(self):
+        t = make_fig7_tree()
+        assert t.depth() == 5
+        out = t.render()
+        assert "a" in out and "%" in out
+
+
+class TestMergeDiff:
+    def test_cross_host_merge(self):
+        t1, t2 = make_fig7_tree(), make_fig7_tree()
+        t1.merge(t2)
+        assert t1.root.children["a"].metrics["samples"] == 4
+
+    def test_diff_isolates_window(self):
+        t = make_fig7_tree()
+        snap = t.copy()
+        t.add_stack(["a", "b", "c", "e"])
+        t.add_stack(["x", "spin"])
+        d = t.diff(snap)
+        assert d.total() == 2
+        assert d.root.children["x"].metrics["samples"] == 1
+        assert "d" not in d.root.children["a"].children["b"].children
+
+    def test_json_roundtrip(self):
+        t = make_fig7_tree()
+        t2 = CallTree.from_json(t.to_json())
+        assert t2.to_json() == t.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+frames = st.lists(st.sampled_from(["a", "b", "c", "d", "e", "f", "g"]), min_size=1, max_size=8)
+stacks = st.lists(frames, min_size=1, max_size=40)
+
+
+@settings(max_examples=100, deadline=None)
+@given(stacks)
+def test_prop_root_total_equals_sample_count(ss):
+    t = CallTree()
+    for s in ss:
+        t.add_stack(s)
+    assert t.total() == len(ss)
+
+
+@settings(max_examples=100, deadline=None)
+@given(stacks)
+def test_prop_children_never_exceed_parent(ss):
+    t = CallTree()
+    for s in ss:
+        t.add_stack(s)
+    for _, node in t.root.walk():
+        child_sum = sum(c.metrics.get("samples", 0) for c in node.children.values())
+        assert child_sum <= node.metrics.get("samples", 0) + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(stacks)
+def test_prop_inclusive_equals_self_plus_children(ss):
+    t = CallTree()
+    for s in ss:
+        t.add_stack(s)
+    for _, node in t.root.walk():
+        child_sum = sum(c.metrics.get("samples", 0) for c in node.children.values())
+        assert math.isclose(
+            node.metrics.get("samples", 0),
+            node.self_metrics.get("samples", 0) + child_sum,
+        )
+
+
+@settings(max_examples=100, deadline=None)
+@given(stacks)
+def test_prop_flatten_conserves_leaf_mass(ss):
+    """Sum of self-metrics over the tree == number of samples."""
+    t = CallTree()
+    for s in ss:
+        t.add_stack(s)
+    self_mass = sum(node.self_metrics.get("samples", 0) for _, node in t.root.walk())
+    assert math.isclose(self_mass, len(ss))
+
+
+@settings(max_examples=100, deadline=None)
+@given(stacks, st.integers(min_value=0, max_value=9))
+def test_prop_levels_preserves_total(ss, n):
+    t = CallTree()
+    for s in ss:
+        t.add_stack(s)
+    assert math.isclose(t.levels(n).total(), t.total())
+
+
+@settings(max_examples=100, deadline=None)
+@given(stacks, stacks)
+def test_prop_merge_is_additive(s1, s2):
+    t1, t2 = CallTree(), CallTree()
+    for s in s1:
+        t1.add_stack(s)
+    for s in s2:
+        t2.add_stack(s)
+    merged = t1.copy().merge(t2)
+    assert math.isclose(merged.total(), len(s1) + len(s2))
+    both = CallTree()
+    for s in s1 + s2:
+        both.add_stack(s)
+    assert merged.to_json() == both.to_json()
+
+
+@settings(max_examples=60, deadline=None)
+@given(stacks, stacks)
+def test_prop_diff_inverts_add(s1, s2):
+    t = CallTree()
+    for s in s1:
+        t.add_stack(s)
+    snap = t.copy()
+    for s in s2:
+        t.add_stack(s)
+    assert math.isclose(t.diff(snap).total(), len(s2))

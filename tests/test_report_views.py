@@ -1,0 +1,80 @@
+"""Report/views tests: HTML export, ViewConfig semantics, views library."""
+
+import json
+
+import jax
+import pytest
+
+from repro.core import CallTree, ViewConfig, breakdown, render_html, write_report
+from repro.core.views_library import VIEWS, list_views, render_view
+
+
+def sample_tree():
+    t = CallTree()
+    for _ in range(6):
+        t.add_stack(["train_step", "model", "attention", "scores"], {"samples": 1, "flops": 100})
+    for _ in range(3):
+        t.add_stack(["train_step", "model", "mlp", "up_proj"], {"samples": 1, "flops": 300})
+    t.add_stack(["train_step", "optimizer", "adamw"], {"samples": 1, "flops": 10})
+    return t
+
+
+class TestHtmlReport:
+    def test_render_html_is_standalone(self):
+        html = render_html(sample_tree(), title="t", metric="flops")
+        assert html.startswith("<!DOCTYPE html>")
+        assert "attention" in html and "calltree-json" in html
+        # embedded JSON round-trips
+        blob = html.split('id="calltree-json">')[1].split("</script>")[0]
+        assert CallTree.from_json(blob).total("flops") == sample_tree().total("flops")
+
+    def test_write_report_files(self, tmp_path):
+        paths = write_report(sample_tree(), str(tmp_path), "r", metric="samples")
+        assert (tmp_path / "r.html").exists() and (tmp_path / "r.json").exists()
+        loaded = CallTree.from_json((tmp_path / "r.json").read_text())
+        assert loaded.total() == 10
+
+
+class TestViewConfig:
+    def test_zoom_and_level(self):
+        v = ViewConfig(name="attn", root="attention", level=1)
+        t = v.apply(sample_tree())
+        assert t.total() == 6
+        assert "attention" in t.root.children
+        assert not t.root.children["attention"].children  # folded at level 1
+
+    def test_csv_shares_sum_leq_one_per_level(self):
+        v = ViewConfig(name="x", level=1)
+        csv = v.to_csv(sample_tree())
+        rows = [l for l in csv.splitlines() if l and not l.startswith(("#", "path"))]
+        shares = [float(r.rsplit(",", 1)[1]) for r in rows]
+        assert all(0 <= s <= 1 for s in shares)
+        assert abs(sum(shares) - 1.0) < 1e-6  # level-1 partitions the total
+
+    def test_blacklist(self):
+        v = ViewConfig(name="x", blacklist=["optimizer"])
+        t = v.apply(sample_tree())
+        assert t.total() == 10  # root metrics kept
+        assert "optimizer" not in t.root.children["train_step"].children
+
+
+class TestViewsLibrary:
+    def test_all_views_render_without_error(self):
+        t = sample_tree()
+        for name in list_views():
+            csv = render_view(t, name)
+            assert csv.startswith("# view=")
+
+    def test_attention_view_isolates_component(self):
+        csv = render_view(sample_tree(), "attention_internals")
+        assert "scores" in csv and "mlp" not in csv
+
+    def test_metric_override(self):
+        csv = render_view(sample_tree(), "model_components", metric="flops")
+        assert "metric=flops" in csv
+
+    def test_library_covers_both_planes(self):
+        names = list_views()
+        assert any(n.startswith("host_") for n in names)
+        assert any("collectives" in n for n in names)
+        assert len(names) >= 20

@@ -1,0 +1,198 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, sharding rules."""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, Pipeline, SyntheticLM
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm
+
+
+class TestAdamW:
+    def params(self):
+        return {"a": jnp.array([1.0, 2.0]), "b": {"w": jnp.ones((2, 2))}}
+
+    def test_matches_reference_math(self):
+        p = {"w": jnp.array([1.0])}
+        g = {"w": jnp.array([0.5])}
+        st_ = adamw_init(p)
+        cfg = AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0, clip_norm=1e9)
+        new_p, st2, _ = adamw_update(g, st_, p, lr=0.1, cfg=cfg)
+        # bias-corrected first step: update = lr * g/|g| = lr (adam property)
+        np.testing.assert_allclose(float(new_p["w"][0]), 1.0 - 0.1, rtol=1e-5)
+        assert int(st2["step"]) == 1
+
+    def test_weight_decay_pulls_to_zero(self):
+        p = {"w": jnp.array([10.0])}
+        g = {"w": jnp.array([0.0])}
+        st_ = adamw_init(p)
+        new_p, _, _ = adamw_update(g, st_, p, lr=0.1, cfg=AdamWConfig(weight_decay=0.1))
+        assert float(new_p["w"][0]) < 10.0
+
+    def test_clipping_bounds_update(self):
+        p = {"w": jnp.array([0.0])}
+        g = {"w": jnp.array([1e6])}
+        st_ = adamw_init(p)
+        _, _, m = adamw_update(g, st_, p, lr=0.1, cfg=AdamWConfig(clip_norm=1.0))
+        assert float(m["clip_scale"]) == pytest.approx(1e-6, rel=1e-3)
+
+    def test_state_mirrors_param_tree(self):
+        p = self.params()
+        st_ = adamw_init(p)
+        assert jax.tree.structure(st_["m"]) == jax.tree.structure(p)
+
+    def test_schedule_warmup_and_decay(self):
+        lr = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0, rel=1e-3)
+        assert float(lr(100)) == pytest.approx(0.1, rel=1e-2)
+        assert float(lr(5)) == pytest.approx(0.5, rel=1e-3)
+
+
+class TestData:
+    def cfg(self, **kw):
+        return DataConfig(vocab=97, seq_len=32, global_batch=8, **kw)
+
+    def test_deterministic_and_resumable(self):
+        ds = SyntheticLM(self.cfg())
+        b1, b2 = ds.batch(7), ds.batch(7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(ds.batch(8)["tokens"], b1["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        b = SyntheticLM(self.cfg()).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_host_sharding_partitions_batch(self):
+        full = SyntheticLM(self.cfg()).batch(3)
+        shards = [
+            SyntheticLM(self.cfg(n_hosts=4, host_id=h)).batch(3)["tokens"] for h in range(4)
+        ]
+        assert all(s.shape[0] == 2 for s in shards)
+        # different hosts generate different rows
+        assert not np.array_equal(shards[0], shards[1])
+
+    def test_tokens_in_vocab(self):
+        b = SyntheticLM(self.cfg()).batch(1)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 97
+
+    def test_pipeline_prefetch_and_state(self):
+        pipe = Pipeline(SyntheticLM(self.cfg()), prefetch=2)
+        a = next(pipe)
+        b = next(pipe)
+        assert pipe.state_dict()["next_step"] == 2
+        pipe.load_state_dict({"next_step": 1})
+        b_again = next(pipe)
+        np.testing.assert_array_equal(b["tokens"], b_again["tokens"])
+        pipe.close()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=1000), st.integers(min_value=0, max_value=1000))
+    def test_prop_distinct_steps_distinct_batches(self, s1, s2):
+        ds = SyntheticLM(self.cfg())
+        t1, t2 = ds.batch(s1)["tokens"], ds.batch(s2)["tokens"]
+        assert np.array_equal(t1, t2) == (s1 == s2)
+
+
+class TestCheckpoint:
+    def tree(self, scale=1.0):
+        return {
+            "params": {"w": np.full((4, 4), scale, np.float32), "b": np.arange(3, dtype=np.int32)},
+            "opt": {"step": np.asarray(7)},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(5, self.tree(), blocking=True)
+        step, tree, manifest = mgr.restore_latest()
+        assert step == 5 and manifest["tag"] == "periodic"
+        np.testing.assert_array_equal(tree["params"]["w"], self.tree()["params"]["w"])
+        np.testing.assert_array_equal(tree["params"]["b"], self.tree()["params"]["b"])
+
+    def test_async_save_then_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self.tree(1.0))
+        mgr.wait()
+        assert mgr.list_steps() == [1]
+
+    def test_keep_policy_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self.tree(s), blocking=True)
+        assert mgr.list_steps() == [3, 4]
+
+    def test_crash_safe_tmp_never_restored(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self.tree(), blocking=True)
+        os.makedirs(tmp_path / "step_0000000002.tmp")  # simulated crashed save
+        step, _, _ = mgr.restore_latest()
+        assert step == 1
+
+    def test_emergency_tagging(self, tmp_path):
+        from repro.core.detector import AnomalyEvent, Rule
+
+        mgr = CheckpointManager(str(tmp_path))
+        ev = AnomalyEvent("LIVELOCK_SUSPECT", ("a", "b"), 0.97, Rule(), 3)
+        mgr.save_emergency(lambda: (9, self.tree()), ev)
+        _, _, manifest = mgr.restore_latest()
+        assert manifest["tag"] == "emergency"
+        assert manifest["extra"]["anomaly"]["share"] == pytest.approx(0.97)
+
+
+class _StubMesh:
+    """spec_for only reads mesh.shape; a stub lets rule tests use any size."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+class TestShardingRules:
+    def test_spec_resolution_and_fallback(self):
+        from repro.models.modules import ArraySpec
+        from repro.sharding import make_strategy, spec_for
+
+        strat = make_strategy("tp_fsdp")
+        mesh = _StubMesh(data=2, model=4)
+        # divisible: vocab 64 over model=4
+        s = spec_for(ArraySpec((64, 32), ("vocab", "embed")), strat, mesh)
+        assert s[0] == "model" and s[1] in (("data",), "data")
+        # non-divisible kv_heads=3 over model=4 -> replicated
+        s2 = spec_for(ArraySpec((32, 3, 8), ("embed", "kv_heads", "head")), strat, mesh)
+        assert s2[1] is None
+
+    def test_production_mesh_divisibility_fallbacks(self):
+        """GQA kv=8 < model=16 replicates KV; experts 128 shard 16-way."""
+        from repro.models.modules import ArraySpec
+        from repro.sharding import make_strategy, spec_for
+
+        strat = make_strategy("tp_fsdp", multi_pod=True)
+        mesh = _StubMesh(pod=2, data=16, model=16)
+        kv = spec_for(ArraySpec((4096, 8, 128), ("embed", "kv_heads", "head")), strat, mesh)
+        assert kv[1] is None  # 8 kv heads cannot shard 16 ways
+        assert kv[0] == ("pod", "data")  # FSDP over pod x data
+        ex = spec_for(ArraySpec((128, 4096, 1536), ("expert", "embed", "mlp")), strat, mesh)
+        assert ex[0] == "model" and ex[1] == ("pod", "data")
+
+    def test_mesh_axis_never_reused(self):
+        from repro.models.modules import ArraySpec
+        from repro.sharding import make_strategy, spec_for
+
+        strat = make_strategy("tp_only")
+        mesh = _StubMesh(data=1, model=4)
+        # both logical axes map to 'model'; only the first may take it
+        s = spec_for(ArraySpec((8, 8), ("vocab", "mlp")), strat, mesh)
+        taken = [x for x in s if x is not None]
+        assert taken == ["model"]
+
+    def test_activation_ctx_identity_outside(self):
+        from repro.sharding import shard_activation
+
+        x = jnp.ones((4, 4))
+        assert shard_activation(x, ("batch", None)) is x

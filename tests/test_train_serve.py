@@ -1,0 +1,176 @@
+"""End-to-end integration: trainer loop (+resume, +watchdog), server, launcher."""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.train import Trainer, TrainJobConfig
+
+
+def job(tmp_path, **kw):
+    base = dict(
+        arch="xlstm-125m",
+        smoke=True,
+        steps=6,
+        global_batch=4,
+        seq_len=32,
+        lr=1e-2,
+        out_dir=str(tmp_path),
+        ckpt_every=3,
+        profile=True,
+        sample_period_s=0.05,
+        resume=True,
+    )
+    base.update(kw)
+    return TrainJobConfig(**base)
+
+
+class TestTrainer:
+    def test_loss_decreases_and_artifacts_written(self, tmp_path):
+        summary = Trainer(job(tmp_path, steps=8)).run()
+        assert summary["steps"] == 8
+        assert summary["final_loss"] < summary["first_loss"]
+        assert os.path.exists(tmp_path / "metrics.json")
+        assert os.path.exists(tmp_path / "heartbeat")
+        # host-plane profile written (the always-on paper toolchain)
+        assert os.path.exists(tmp_path / "host_profile.html")
+
+    def test_checkpoint_resume_exact(self, tmp_path):
+        t1 = Trainer(job(tmp_path, steps=6))
+        t1.run()
+        # second run continues from step 6 checkpoint, runs to 9
+        t2 = Trainer(job(tmp_path, steps=9))
+        t2.run()
+        assert t2.step == 9
+        with open(tmp_path / "metrics.json") as f:
+            log = json.load(f)
+        steps = [m["step"] for m in log["steps"]]
+        assert steps == [7, 8, 9]
+
+    def test_resume_reproduces_uninterrupted_run(self, tmp_path):
+        """train(6)+resume(4) == train(10) bit-for-bit on the loss curve."""
+        a = tmp_path / "a"
+        b = tmp_path / "b"
+        Trainer(job(a, steps=5, ckpt_every=5, profile=False)).run()
+        Trainer(job(a, steps=10, ckpt_every=5, profile=False)).run()
+        Trainer(job(b, steps=10, ckpt_every=10, profile=False)).run()
+        with open(a / "metrics.json") as f:
+            la = json.load(f)["steps"]
+        with open(b / "metrics.json") as f:
+            lb = json.load(f)["steps"]
+        la = {m["step"]: m["loss"] for m in la}
+        lb = {m["step"]: m["loss"] for m in lb}
+        for s in (6, 8, 10):
+            assert la[s] == pytest.approx(lb[s], rel=1e-4), f"divergence at step {s}"
+
+
+class TestServer:
+    def test_batched_serving_completes_requests(self):
+        from repro.configs import get_config
+        from repro.launch.serve import BatchedServer, Request
+        from repro.models import Model
+
+        cfg = get_config("gemma-2b", smoke=True)
+        model = Model(cfg)
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32), max_new=4)
+            for i in range(6)
+        ]
+        server = BatchedServer(model, batch=3, max_len=64)
+        stats = server.run(reqs)
+        assert stats["requests_done"] == 6
+        assert all(len(r.out) == 4 for r in reqs)
+        assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
+
+    def test_continuous_batching_reuses_slots(self):
+        from repro.configs import get_config
+        from repro.launch.serve import BatchedServer, Request
+        from repro.models import Model
+
+        cfg = get_config("xlstm-125m", smoke=True)
+        model = Model(cfg)
+        reqs = [Request(rid=i, prompt=np.array([1, 2, 3], np.int32), max_new=2) for i in range(5)]
+        server = BatchedServer(model, batch=2, max_len=64)
+        stats = server.run(reqs)
+        assert stats["requests_done"] == 5  # 5 requests through 2 slots
+
+
+class TestLauncher:
+    def _script(self, tmp_path, hang: bool):
+        """A child that heartbeats, then either finishes or hangs forever."""
+        p = tmp_path / "child.py"
+        hb = tmp_path / "heartbeat"
+        marker = tmp_path / "attempts.txt"
+        p.write_text(
+            f"""
+import os, sys, time
+hb = {str(hb)!r}
+marker = {str(marker)!r}
+with open(marker, 'a') as f:
+    f.write('x')
+attempts = os.path.getsize(marker)
+for i in range(3):
+    open(hb, 'w').write(str(i))
+    time.sleep(0.05)
+if {hang!r} and attempts == 1:
+    time.sleep(3600)   # first attempt hangs after heartbeats stop
+open(hb, 'w').write('done')
+"""
+        )
+        return p, hb, marker
+
+    def test_restart_on_hang_then_success(self, tmp_path):
+        from repro.launch.launcher import LaunchConfig, Launcher
+
+        script, hb, marker = self._script(tmp_path, hang=True)
+        cfg = LaunchConfig(
+            cmd=[sys.executable, str(script)],
+            workdir=str(tmp_path),
+            heartbeat_path=str(hb),
+            heartbeat_timeout_s=1.0,
+            poll_s=0.1,
+            max_restarts=2,
+            backoff_s=0.1,
+        )
+        rep = Launcher(cfg).run()
+        assert rep.exit_code == 0
+        assert rep.restarts == 1  # hung once, restarted, completed
+        assert marker.read_text() == "xx"
+
+    def test_clean_job_no_restarts(self, tmp_path):
+        from repro.launch.launcher import LaunchConfig, Launcher
+
+        script, hb, _ = self._script(tmp_path, hang=False)
+        cfg = LaunchConfig(
+            cmd=[sys.executable, str(script)],
+            workdir=str(tmp_path),
+            heartbeat_path=str(hb),
+            heartbeat_timeout_s=5.0,
+            poll_s=0.1,
+        )
+        rep = Launcher(cfg).run()
+        assert rep.exit_code == 0 and rep.restarts == 0
+
+    def test_gives_up_after_budget(self, tmp_path):
+        from repro.launch.launcher import LaunchConfig, Launcher
+
+        p = tmp_path / "bad.py"
+        p.write_text("import sys; sys.exit(3)")
+        cfg = LaunchConfig(
+            cmd=[sys.executable, str(p)],
+            workdir=str(tmp_path),
+            heartbeat_path=str(tmp_path / "hb"),
+            heartbeat_timeout_s=5.0,
+            poll_s=0.05,
+            max_restarts=2,
+            backoff_s=0.01,
+        )
+        rep = Launcher(cfg).run()
+        assert rep.exit_code == 3
+        assert rep.restarts == 3  # budget exhausted
