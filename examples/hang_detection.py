@@ -1,16 +1,24 @@
-"""Fig. 13 end-to-end: a training job develops a livelock mid-run; the
-watchdog detects the dominance signature, takes an emergency checkpoint, and
-the job restarts from it.
+"""Fig. 13 end-to-end, both profiler backends.
 
-A worker thread starts spinning (a stuck collective / lock-retry analogue)
-partway through training. The dominance detector flags it within a couple of
-windows, the checkpoint manager writes an 'emergency'-tagged checkpoint with
-the anomaly recorded in the manifest, and a fresh Trainer resumes from it.
+Part 1 (thread backend): a training job develops a livelock mid-run; the
+in-process watchdog detects the dominance signature, takes an emergency
+checkpoint, and the job restarts from it.
+
+Part 2 (daemon backend): the scenario an in-process helper thread *cannot*
+handle — the target's interpreter is fully wedged (here: SIGSTOP, the
+stand-in for a GIL held forever in native code), so no helper thread inside
+the process can run either.  The target only publishes raw frames to a spool;
+the out-of-process ``repro.profilerd`` daemon notices the spool has gone
+silent while the pid is still alive and fires a ``TARGET_STALLED`` verdict —
+the paper's external-observer architecture earning its keep.
 
   PYTHONPATH=src python examples/hang_detection.py
 """
 
+import json
 import os
+import signal
+import subprocess
 import sys
 import threading
 import time
@@ -26,10 +34,13 @@ def injected_livelock_spin(stop):
         x += 1
 
 
-def main(out_dir="/tmp/repro_hang_demo"):
+def part1_thread_backend(out_dir="/tmp/repro_hang_demo"):
+    """In-process watchdog: livelock -> emergency checkpoint -> restart."""
     import shutil
 
     shutil.rmtree(out_dir, ignore_errors=True)
+    from repro.core import Rule
+
     job = TrainJobConfig(
         arch="gemma-2b",
         smoke=True,
@@ -40,6 +51,11 @@ def main(out_dir="/tmp/repro_hang_demo"):
         ckpt_every=50,  # only the watchdog will checkpoint
         sample_period_s=0.02,
         watchdog_threshold=0.35,  # the spin shares the single CPU with real work
+        # The generic dominance rule is timing-sensitive on a single CPU (jit
+        # compilation legitimately dominates early windows); scope a rule to
+        # the known injection signature so the demo is deterministic.
+        extra_rules=[Rule(pattern="injected_livelock_spin", threshold=0.2,
+                          consecutive=2, min_window_total=4, self_only=False)],
     )
     trainer = Trainer(job)
 
@@ -69,6 +85,81 @@ def main(out_dir="/tmp/repro_hang_demo"):
     ))
     summary2 = resumed.run()
     print(f"resumed and ran to step {summary2['steps']}")
+
+
+_WEDGED_TARGET = r"""
+import sys, time
+sys.path.insert(0, sys.argv[2])
+from repro.core import SamplerConfig, make_sampler
+
+# Daemon backend, externally-drained spool: the only profiling work in this
+# process is the raw-frame publisher.
+sampler = make_sampler(SamplerConfig(
+    backend="daemon", spool_path=sys.argv[1], spawn_daemon=False, period_s=0.05))
+sampler.start()
+t0 = time.monotonic()
+x = 0
+while time.monotonic() - t0 < 30.0:   # parent SIGSTOPs us long before this
+    x += 1
+sampler.stop()
+"""
+
+
+def part2_daemon_backend(out_dir="/tmp/repro_hang_demo_daemon"):
+    """Out-of-process daemon: fully wedged target -> TARGET_STALLED."""
+    import shutil
+
+    from repro.core.detector import Rule
+    from repro.profilerd import DaemonConfig, ProfilerDaemon
+
+    shutil.rmtree(out_dir, ignore_errors=True)
+    os.makedirs(out_dir)
+    spool = os.path.join(out_dir, "target.spool")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+
+    target = subprocess.Popen([sys.executable, "-c", _WEDGED_TARGET, spool, src])
+    print(f">>> target pid={target.pid} publishing raw frames to {spool} <<<")
+
+    daemon = ProfilerDaemon(DaemonConfig(
+        spool_path=spool, publish_interval_s=0.25, stall_timeout_s=1.0,
+        rules=[Rule(threshold=0.9, consecutive=2)], max_seconds=30.0,
+    ))
+    daemon.attach()
+
+    stalled = {"seen": False}
+
+    def watch(d):
+        for ev in d.events:
+            if ev["kind"] == "TARGET_STALLED" and not stalled["seen"]:
+                stalled["seen"] = True
+                print(f">>> daemon verdict: {json.dumps(ev)} <<<")
+        if stalled["seen"]:
+            d.bye_seen = True  # verdict delivered: end the attach loop
+
+    def wedge_later():
+        time.sleep(2.0)
+        print(">>> wedging the target's interpreter (SIGSTOP) <<<")
+        os.kill(target.pid, signal.SIGSTOP)
+
+    threading.Thread(target=wedge_later, daemon=True).start()
+    tree = daemon.run(on_publish=watch)
+
+    os.kill(target.pid, signal.SIGCONT)
+    target.terminate()
+    target.wait()
+
+    print(f"daemon merged {daemon.n_stacks} stacks before the wedge; hot paths:")
+    for path, share in tree.hot_paths(k=3):
+        print(f"  {share:7.2%}  {'/'.join(path)}")
+    assert stalled["seen"], "daemon failed to flag the wedged target"
+    assert daemon.n_stacks > 0, "daemon streamed no samples before the wedge"
+    print(f"artifacts: {sorted(os.listdir(daemon.out_dir))}")
+
+
+def main():
+    part1_thread_backend()
+    print()
+    part2_daemon_backend()
 
 
 if __name__ == "__main__":

@@ -1,48 +1,66 @@
 """repro.core — the paper's contribution: call-stack profiling as a first-class
-framework feature (host plane + device plane + anomaly detection)."""
+framework feature (host plane + device plane + anomaly detection).
 
-from .calltree import SAMPLES, CallNode, CallTree
-from .detector import AnomalyEvent, DominanceDetector, Rule, StragglerDetector, WatchdogLoop
-from .engines import BlockwiseEngine, CompiledEngine, EagerEngine, compare_engines
-from .hlo_tree import (
-    COLLECTIVE_OPS,
-    build_device_tree,
-    collective_summary,
-    parse_hlo_module,
-    tree_from_compiled,
-)
-from .report import ViewConfig, breakdown, render_html, save_views, write_report
-from .roofline import V5E, HardwareSpec, RooflineReport, report_from_artifacts
-from .sampler import DEFAULT_PERIOD_S, SamplerConfig, StackSampler
+Exports resolve lazily (PEP 562): the profiling plane (``calltree`` /
+``sampler`` / ``detector`` / ``report``) is pure-Python and must stay
+importable in milliseconds — the out-of-process ``repro.profilerd`` daemon
+imports it on every attach — while the device plane (``engines`` /
+``hlo_tree`` / ``roofline``) pulls in JAX and is only paid for on first use.
+"""
 
-__all__ = [
-    "SAMPLES",
-    "CallNode",
-    "CallTree",
-    "AnomalyEvent",
-    "DominanceDetector",
-    "Rule",
-    "StragglerDetector",
-    "WatchdogLoop",
-    "BlockwiseEngine",
-    "CompiledEngine",
-    "EagerEngine",
-    "compare_engines",
-    "COLLECTIVE_OPS",
-    "build_device_tree",
-    "collective_summary",
-    "parse_hlo_module",
-    "tree_from_compiled",
-    "ViewConfig",
-    "breakdown",
-    "render_html",
-    "save_views",
-    "write_report",
-    "V5E",
-    "HardwareSpec",
-    "RooflineReport",
-    "report_from_artifacts",
-    "DEFAULT_PERIOD_S",
-    "SamplerConfig",
-    "StackSampler",
-]
+from importlib import import_module
+
+_EXPORTS = {
+    # host plane (light, no jax)
+    "SAMPLES": ".calltree",
+    "CallNode": ".calltree",
+    "CallTree": ".calltree",
+    "AnomalyEvent": ".detector",
+    "DominanceDetector": ".detector",
+    "Rule": ".detector",
+    "StragglerDetector": ".detector",
+    "WatchdogLoop": ".detector",
+    "DEFAULT_PERIOD_S": ".sampler",
+    "SamplerBackend": ".sampler",
+    "SamplerConfig": ".sampler",
+    "StackSampler": ".sampler",
+    "classify_frame": ".sampler",
+    "collapse_stack": ".sampler",
+    "frame_symbol": ".sampler",
+    "make_sampler": ".sampler",
+    "ViewConfig": ".report",
+    "breakdown": ".report",
+    "render_html": ".report",
+    "save_views": ".report",
+    "write_report": ".report",
+    # device plane (imports jax on first access)
+    "BlockwiseEngine": ".engines",
+    "CompiledEngine": ".engines",
+    "EagerEngine": ".engines",
+    "compare_engines": ".engines",
+    "COLLECTIVE_OPS": ".hlo_tree",
+    "build_device_tree": ".hlo_tree",
+    "collective_summary": ".hlo_tree",
+    "parse_hlo_module": ".hlo_tree",
+    "tree_from_compiled": ".hlo_tree",
+    "V5E": ".roofline",
+    "HardwareSpec": ".roofline",
+    "RooflineReport": ".roofline",
+    "report_from_artifacts": ".roofline",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(import_module(module, __name__), name)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

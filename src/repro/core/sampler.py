@@ -1,25 +1,30 @@
-"""External sampling profiler — host plane (paper §III-D "profiler").
+"""Sampling profiler backends — host plane (paper §III-D "profiler").
 
 The paper attaches a stand-alone helper *process* to gem5 via Linux
 ``perf_event`` and periodically captures call-chains without instrumenting the
-target. The container-feasible JAX analogue keeps the same contract — the
-profiled code is never modified and never calls into the profiler — by running
-a dedicated helper *thread* that:
+target.  Two backends implement that contract here, selected by
+:attr:`SamplerConfig.backend` and constructed via :func:`make_sampler`:
 
-* every ``period`` seconds snapshots **every** Python thread's stack via
-  ``sys._current_frames()`` (the target threads are fully unaware; CPython
-  publishes the frames, the helper walks them),
-* resolves "symbols" from code objects and classifies each frame by origin
-  (``repro``/``jax``/``numpy``/``py``), mirroring the paper's ELF symbol
-  resolution + its observation that ~20 frames of a typical gem5 stack are
-  pybind11 bookkeeping — here the analogous noise is jax dispatch/tracing,
-* merges each sample into a :class:`~repro.core.calltree.CallTree` on the fly,
-* records a ``(t, depth)`` timeline (paper Fig. 2),
-* optionally samples ``/proc/self`` cpu/rss (the paper's host-resource plane).
+* ``"thread"`` — :class:`StackSampler`, a dedicated in-process helper thread
+  that every ``period`` seconds snapshots **every** Python thread's stack via
+  ``sys._current_frames()``, resolves "symbols" from code objects, classifies
+  each frame by origin (``repro``/``jax``/``numpy``/``py``), merges each
+  sample into a :class:`~repro.core.calltree.CallTree` on the fly, records a
+  ``(t, depth)`` timeline (paper Fig. 2), and optionally samples
+  ``/proc/self`` cpu/rss.  Cheap to wire up, but resolution/classification/
+  merging all burn target-process cycles.
 
-A true out-of-process backend (py-spy / perf with ``PERF_COUNT_SW_CPU_CLOCK``)
-drops in by replacing :meth:`StackSampler._capture`; on a TPU pod each host
-runs its own sampler and the per-host trees are merged with
+* ``"daemon"`` — :class:`repro.profilerd.agent.DaemonBackend`, the paper's
+  actual architecture: the target only publishes **raw, unresolved** frame
+  records into a lock-free mmap ring spool; a separate daemon process
+  (``python -m repro.profilerd``) resolves, classifies, merges, runs the
+  dominance/stall detectors, and serves live status + reports.  See
+  :mod:`repro.profilerd`.
+
+Symbol resolution and origin-collapse (:func:`frame_symbol`,
+:func:`collapse_stack`) are shared by both backends, so they produce
+identical trees from identical frames — a tested invariant.  On a TPU pod
+each host runs its own backend and the per-host trees are merged with
 ``CallTree.merge`` at rendezvous (see ``launch/launcher.py``).
 """
 
@@ -30,12 +35,18 @@ import sys
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Protocol, Sequence, runtime_checkable
 
 from .calltree import SAMPLES, CallTree
 
 # Default matches the paper (§V-E): 0.5 s balances detail vs overhead.
 DEFAULT_PERIOD_S = 0.5
+
+# Environment seam used by the launcher's per-host daemons: when set, jobs
+# built through make_sampler publish to this spool for an external
+# `python -m repro.profilerd` to drain.
+ENV_SPOOL = "REPRO_PROFILERD_SPOOL"
+ENV_PERIOD = "REPRO_PROFILERD_PERIOD"
 
 
 def classify_frame(filename: str) -> str:
@@ -55,15 +66,119 @@ def frame_symbol(frame) -> str:
     return f"{origin}::{code.co_name}"
 
 
+# Threads whose names carry this prefix are profiler infrastructure (helper,
+# watchdog, agent) and are excluded from every backend's capture — part of
+# the "identical trees from identical frames" parity contract.
+PROFILER_THREAD_PREFIX = "repro-"
+
+
+def is_profiler_thread(name: str) -> bool:
+    return name.startswith(PROFILER_THREAD_PREFIX)
+
+
+def open_psutil_process():
+    """The optional /proc rusage handle both backends sample, or None."""
+    try:
+        import psutil
+
+        return psutil.Process(os.getpid())
+    except Exception:  # pragma: no cover - psutil is optional
+        return None
+
+
+def collapse_stack(symbols: Sequence[str], collapse_origins: Sequence[str]) -> list[str]:
+    """Fold runs of frames from ``collapse_origins`` into one ``origin::*`` node.
+
+    The paper's answer to "20 pybind frames bury the interesting ones"; shared
+    by the thread backend and the daemon's resolver so both produce identical
+    stacks.
+    """
+    if not collapse_origins:
+        return list(symbols)
+    collapsed: list[str] = []
+    for sym in symbols:
+        origin = sym.split("::", 1)[0]
+        if origin in collapse_origins:
+            star = f"{origin}::*"
+            if collapsed and collapsed[-1] == star:
+                continue
+            collapsed.append(star)
+        else:
+            collapsed.append(sym)
+    return collapsed
+
+
 @dataclass
 class SamplerConfig:
     period_s: float = DEFAULT_PERIOD_S
     max_depth: int = 256
-    # Collapse consecutive frames from these origins into one node — the
-    # paper's answer to "20 pybind frames bury the interesting ones".
+    # Collapse consecutive frames from these origins into one node.
     collapse_origins: tuple[str, ...] = ()
     record_timeline: bool = True
     record_rusage: bool = True
+    # -- backend seam ------------------------------------------------------
+    # "thread": in-process helper thread (StackSampler).
+    # "daemon": raw-frame publisher + out-of-process repro.profilerd daemon.
+    backend: str = "thread"
+    # Daemon backend: spool file the agent publishes to (default: a temp path).
+    spool_path: Optional[str] = None
+    spool_bytes: int = 4 << 20
+    # Daemon backend: where the daemon publishes status/tree/report files
+    # (default: "<spool_path>.d").
+    daemon_out: Optional[str] = None
+    # None -> auto: spawn `python -m repro.profilerd` iff no explicit spool
+    # path was given (an explicit spool means an external daemon attaches).
+    spawn_daemon: Optional[bool] = None
+
+
+@runtime_checkable
+class SamplerBackend(Protocol):
+    """What the drivers (train/serve/watchdog/benchmarks) require of a backend."""
+
+    def start(self) -> "SamplerBackend": ...
+
+    def stop(self) -> CallTree: ...
+
+    def snapshot(self) -> CallTree: ...
+
+    def sample_now(self) -> None: ...
+
+    def depth_trace(self) -> list[tuple[float, int]]: ...
+
+
+def make_sampler(config: Optional[SamplerConfig] = None) -> SamplerBackend:
+    """Construct the backend selected by ``config.backend``.
+
+    The ``REPRO_PROFILERD_SPOOL`` environment variable overrides the choice to
+    the daemon backend with an externally-managed daemon — this is how the
+    launcher attaches one profilerd per supervised host process without the
+    job's own config knowing about it.
+    """
+    config = config or SamplerConfig()
+    env_spool = os.environ.pop(ENV_SPOOL, None)
+    if env_spool:
+        from dataclasses import replace
+
+        # The override is consumed (popped), not just read: a spool belongs to
+        # exactly one publisher, and grandchild processes inheriting the
+        # variable would recreate the file out from under the daemon's mmap.
+        period = config.period_s
+        env_period = os.environ.pop(ENV_PERIOD, None)
+        if env_period:
+            try:
+                period = float(env_period)
+            except ValueError:
+                pass
+        config = replace(
+            config, backend="daemon", spool_path=env_spool, spawn_daemon=False, period_s=period
+        )
+    if config.backend == "thread":
+        return StackSampler(config)
+    if config.backend == "daemon":
+        from repro.profilerd.agent import DaemonBackend
+
+        return DaemonBackend(config)
+    raise ValueError(f"unknown sampler backend {config.backend!r} (expected 'thread' or 'daemon')")
 
 
 @dataclass
@@ -81,7 +196,7 @@ class RusagePoint:
 
 
 class StackSampler:
-    """Sampling-based, non-intrusive profiler for the host runtime."""
+    """The ``thread`` backend: sampling helper thread inside the target."""
 
     def __init__(self, config: Optional[SamplerConfig] = None):
         self.config = config or SamplerConfig()
@@ -93,14 +208,7 @@ class StackSampler:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._t0 = time.monotonic()
-        self._psutil_proc = None
-        if self.config.record_rusage:
-            try:
-                import psutil
-
-                self._psutil_proc = psutil.Process(os.getpid())
-            except Exception:  # pragma: no cover - psutil is optional
-                self._psutil_proc = None
+        self._psutil_proc = open_psutil_process() if self.config.record_rusage else None
 
     # -- capture -----------------------------------------------------------------
 
@@ -112,18 +220,10 @@ class StackSampler:
             frame = frame.f_back
             depth += 1
         rev.reverse()  # root -> leaf
-        if self.config.collapse_origins:
-            collapsed: list[str] = []
-            for sym in rev:
-                origin = sym.split("::", 1)[0]
-                if origin in self.config.collapse_origins and collapsed and collapsed[-1] == f"{origin}::*":
-                    continue
-                collapsed.append(f"{origin}::*" if origin in self.config.collapse_origins else sym)
-            rev = collapsed
-        return rev
+        return collapse_stack(rev, self.config.collapse_origins)
 
     def _capture(self) -> None:
-        me = threading.get_ident()
+        helper = self._thread.ident if self._thread is not None else None
         names = {t.ident: t.name for t in threading.enumerate()}
         now = time.monotonic() - self._t0
         frames = sys._current_frames()
@@ -131,7 +231,9 @@ class StackSampler:
             for ident, frame in frames.items():
                 # Profiler infrastructure lives "outside the cgroup": neither
                 # the helper itself nor watchdog/report threads are profiled.
-                if ident == me or names.get(ident, "").startswith("repro-"):
+                # (A synchronous sample_now() caller *is* profiled — it is
+                # target code asking for a sample of itself.)
+                if ident == helper or is_profiler_thread(names.get(ident, "")):
                     continue
                 stack = self._stack_of(frame)
                 tname = names.get(ident, f"tid{ident}")

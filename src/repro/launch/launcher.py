@@ -13,6 +13,14 @@ trainer. Mechanism (the paper's external-observer stance, one level up):
   shrunk fleet resumes with re-partitioned data shards — checkpoints store
   logical state only, never device layouts.
 
+**Per-host profiling daemons** (``profile_dir``): the launcher attaches one
+``python -m repro.profilerd`` to every supervised process — the child only
+publishes raw frames to a spool (it picks the daemon backend up from
+``REPRO_PROFILERD_SPOOL``, no config change needed), the daemon aggregates
+out-of-process, and at rendezvous (job end) the per-host/per-attempt trees
+are merged with ``CallTree.merge`` into ``merged_tree.json`` — the paper's
+cross-host aggregation, with zero profiling work inside any trainer.
+
 On a real multi-pod deployment this wraps the per-host ``jax.distributed``
 bring-up; in this container it supervises local subprocesses, and the tests
 exercise hang-detection + restart with a deliberately stalling child.
@@ -20,6 +28,7 @@ exercise hang-detection + restart with a deliberately stalling child.
 
 from __future__ import annotations
 
+import json
 import os
 import signal
 import subprocess
@@ -39,6 +48,10 @@ class LaunchConfig:
     max_restarts: int = 3
     backoff_s: float = 1.0
     env: dict = field(default_factory=dict)
+    # When set, attach one repro.profilerd daemon per supervised process;
+    # spools/trees land here and merge at rendezvous.
+    profile_dir: Optional[str] = None
+    profile_period_s: float = 0.2
 
 
 @dataclass
@@ -56,6 +69,11 @@ class Launcher:
     def __init__(self, cfg: LaunchConfig):
         self.cfg = cfg
         self.report = LaunchReport()
+        self._daemons: list[subprocess.Popen] = []
+        if cfg.profile_dir and not os.path.isabs(cfg.profile_dir):
+            # The launcher, the daemon (cwd=workdir), and the child all touch
+            # this path; resolve it once, against the job's workdir.
+            cfg.profile_dir = os.path.abspath(os.path.join(cfg.workdir, cfg.profile_dir))
 
     def _heartbeat_age(self) -> float:
         try:
@@ -63,19 +81,70 @@ class Launcher:
         except OSError:
             return float("inf")
 
-    def _spawn(self) -> subprocess.Popen:
+    def _spawn(self, attempt: int = 0) -> subprocess.Popen:
         env = {**os.environ, **self.cfg.env}
+        if self.cfg.profile_dir:
+            spool = os.path.join(self.cfg.profile_dir, f"attempt{attempt}.spool")
+            env["REPRO_PROFILERD_SPOOL"] = spool
+            env["REPRO_PROFILERD_PERIOD"] = str(self.cfg.profile_period_s)
+            self._attach_daemon(spool)
         return subprocess.Popen(
             self.cfg.cmd, cwd=self.cfg.workdir, env=env,
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
         )
+
+    # -- per-host profiling daemons ------------------------------------------
+
+    def _attach_daemon(self, spool: str) -> None:
+        from repro.profilerd.daemon import spawn_attached_daemon
+
+        os.makedirs(self.cfg.profile_dir, exist_ok=True)
+        proc = spawn_attached_daemon(
+            spool,
+            stall_timeout_s=self.cfg.heartbeat_timeout_s,
+            cwd=self.cfg.workdir,
+        )
+        self._daemons.append(proc)
+        self.report.log(f"profilerd attached (spool={spool})")
+
+    def _rendezvous_merge(self) -> Optional[str]:
+        """Merge every per-attempt tree the daemons published (CallTree.merge)."""
+        if not self.cfg.profile_dir:
+            return None
+        for d in self._daemons:  # daemons exit on BYE / target death
+            try:
+                d.wait(timeout=15.0)
+            except subprocess.TimeoutExpired:
+                d.kill()
+                d.wait()
+        from repro.core.calltree import CallNode, CallTree
+
+        merged = CallTree()
+        n = 0
+        for entry in sorted(os.listdir(self.cfg.profile_dir)):
+            path = os.path.join(self.cfg.profile_dir, entry, "tree.json")
+            if not entry.endswith(".d") or not os.path.exists(path):
+                continue
+            try:
+                with open(path) as f:
+                    merged.merge(CallTree(CallNode.from_dict(json.load(f))))
+                n += 1
+            except (OSError, ValueError) as e:
+                self.report.log(f"skipping unreadable tree {path}: {e}")
+        if n == 0:
+            return None
+        out = os.path.join(self.cfg.profile_dir, "merged_tree.json")
+        with open(out, "w") as f:
+            f.write(merged.to_json())
+        self.report.log(f"rendezvous: merged {n} host tree(s) -> {out}")
+        return out
 
     def run(self) -> LaunchReport:
         cfg, rep = self.cfg, self.report
         attempt = 0
         while True:
             start = time.time()
-            proc = self._spawn()
+            proc = self._spawn(attempt)
             rep.log(f"spawned attempt {attempt} pid={proc.pid}")
             hung = False
             while True:
@@ -95,6 +164,7 @@ class Launcher:
             if not hung and proc.returncode == 0:
                 rep.exit_code = 0
                 rep.log("job completed")
+                self._rendezvous_merge()
                 return rep
             reason = "hang" if hung else f"exit={proc.returncode}"
             attempt += 1
@@ -103,6 +173,7 @@ class Launcher:
                 rep.exit_code = proc.returncode if not hung else -9
                 rep.log(f"giving up after {attempt - 1} restarts ({reason}); last output tail:\n"
                         + "\n".join(out.splitlines()[-5:]))
+                self._rendezvous_merge()
                 return rep
             rep.log(f"restarting ({reason}); resume comes from the latest checkpoint")
             time.sleep(cfg.backoff_s * attempt)

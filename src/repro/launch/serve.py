@@ -10,6 +10,11 @@ watchdog's hang rule.
 
 CLI:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 16
+
+Out-of-process profiling (attach `python -m repro.profilerd` from another
+terminal — the serving loop only publishes raw frames):
+  PYTHONPATH=src python -m repro.launch.serve --profile --backend daemon \\
+      --spool /tmp/serve.spool
 """
 
 from __future__ import annotations
@@ -25,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import DominanceDetector, Rule, SamplerConfig, StackSampler, WatchdogLoop
+from repro.core import DominanceDetector, Rule, SamplerConfig, WatchdogLoop, make_sampler
 from repro.launch.steps import make_serve_step
 from repro.models import Model
 
@@ -111,6 +116,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--profile", action="store_true")
+    ap.add_argument("--backend", default="thread", choices=("thread", "daemon"),
+                    help="profiler backend (daemon = out-of-process repro.profilerd)")
+    ap.add_argument("--spool", default=None,
+                    help="daemon backend: spool path for an externally-attached profilerd")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full)
@@ -121,7 +130,13 @@ def main():
                 max_new=args.max_new)
         for i in range(args.requests)
     ]
-    sampler = StackSampler(SamplerConfig(period_s=0.1)) if args.profile else None
+    sampler = (
+        make_sampler(
+            SamplerConfig(period_s=0.1, backend=args.backend, spool_path=args.spool)
+        )
+        if args.profile
+        else None
+    )
     wd = None
     if sampler:
         det = DominanceDetector([Rule(threshold=0.95, consecutive=3, min_window_total=8)])
@@ -132,7 +147,8 @@ def main():
     stats = server.run(reqs)
     if sampler:
         wd.stop()
-        sampler.stop()
+        tree = sampler.stop()
+        stats["profile_samples"] = tree.total()
     print(json.dumps(stats, indent=1))
 
 

@@ -13,7 +13,7 @@ Wires every subsystem together the way a production job would:
 * heartbeat file per step — the launcher's process-level hang detector.
 
 CLI (CPU-scale by default — full configs are exercised via the dry-run):
-  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke --steps 30
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 30
 """
 
 from __future__ import annotations
@@ -35,8 +35,8 @@ from repro.core import (
     DominanceDetector,
     Rule,
     SamplerConfig,
-    StackSampler,
     WatchdogLoop,
+    make_sampler,
     write_report,
 )
 from repro.data import DataConfig, Pipeline, SyntheticLM
@@ -59,8 +59,19 @@ class TrainJobConfig:
     out_dir: str = "/tmp/repro_train"
     ckpt_every: int = 20
     profile: bool = True
+    # "thread" = in-process StackSampler; "daemon" = raw-frame agent + external
+    # repro.profilerd process (see src/repro/profilerd/).
+    profile_backend: str = "thread"
+    # Daemon backend: explicit spool path means an external
+    # `python -m repro.profilerd attach --spool ...` drains it; when None a
+    # daemon subprocess is spawned automatically.
+    spool_path: Optional[str] = None
     sample_period_s: float = 0.2
     watchdog_threshold: float = 0.95
+    # Extra detector rules appended to the defaults (e.g. a pattern-scoped
+    # rule for a known livelock signature — far more robust than tuning the
+    # generic threshold).
+    extra_rules: Optional[list] = None
     heartbeat_timeout_s: float = 600.0
     resume: bool = True
 
@@ -93,7 +104,17 @@ class Trainer:
         )
 
         # -- profiling plane (the paper's toolchain, always on) -------------
-        self.sampler = StackSampler(SamplerConfig(period_s=job.sample_period_s)) if job.profile else None
+        self.sampler = (
+            make_sampler(
+                SamplerConfig(
+                    period_s=job.sample_period_s,
+                    backend=job.profile_backend,
+                    spool_path=job.spool_path,
+                )
+            )
+            if job.profile
+            else None
+        )
         self.detector = DominanceDetector(
             [
                 # generic livelock/hang rule (paper's 90%-class threshold)
@@ -101,7 +122,8 @@ class Trainer:
                 # input starvation: the prefetch worker should never dominate
                 Rule(pattern="_prefetch_worker", threshold=0.6, consecutive=2,
                      min_window_total=8, self_only=False, kind="INPUT_STARVATION"),
-            ],
+            ]
+            + list(job.extra_rules or []),
         )
         self.detector.add_callback(self._on_anomaly)
         self.watchdog = WatchdogLoop(self.sampler, self.detector, interval_s=1.0) if self.sampler else None
@@ -200,6 +222,10 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--out", default="/tmp/repro_train")
     ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--backend", default="thread", choices=("thread", "daemon"),
+                    help="profiler backend (daemon = out-of-process repro.profilerd)")
+    ap.add_argument("--spool", default=None,
+                    help="daemon backend: spool path for an externally-attached profilerd")
     args = ap.parse_args()
     job = TrainJobConfig(
         arch=args.arch,
@@ -211,6 +237,8 @@ def main():
         grad_accum=args.grad_accum,
         out_dir=args.out,
         resume=not args.no_resume,
+        profile_backend=args.backend,
+        spool_path=args.spool,
     )
     summary = Trainer(job).run()
     print(json.dumps(summary, indent=1))

@@ -1,0 +1,40 @@
+"""repro.profilerd — out-of-process profiling daemon (paper §III "profiler").
+
+The paper's headline design point: *all* profiling runs in a separate process
+alongside the simulator, so the target pays only for raw frame capture and is
+never instrumented.  This package is that plane for JAX jobs:
+
+* :mod:`repro.profilerd.wire`     — self-delimiting binary codec for raw,
+  *unresolved* frame records (transport-agnostic: ring buffer or socket);
+* :mod:`repro.profilerd.spool`    — single-writer/single-reader byte ring over
+  an mmap'd file, the default transport (the agent never blocks: a full spool
+  drops whole batches and counts them);
+* :mod:`repro.profilerd.agent`    — the only code that runs inside the target:
+  snapshot ``sys._current_frames()`` each tick and append raw records;
+* :mod:`repro.profilerd.resolver` — interned-symbol cache turning raw frames
+  into ``origin::name`` symbols, identical to the in-process sampler's;
+* :mod:`repro.profilerd.daemon`   — drains the spool, merges into a
+  :class:`~repro.core.calltree.CallTree`, runs dominance/stall detection
+  out-of-process, publishes live status and HTML/JSON reports;
+* ``python -m repro.profilerd``   — attach to a running job by spool path.
+"""
+
+from .agent import Agent, DaemonBackend
+from .daemon import DaemonConfig, ProfilerDaemon
+from .resolver import SymbolResolver
+from .spool import SpoolReader, SpoolWriter
+from .wire import Decoder, Encoder, RawFrame, RawSample
+
+__all__ = [
+    "Agent",
+    "DaemonBackend",
+    "DaemonConfig",
+    "ProfilerDaemon",
+    "SymbolResolver",
+    "SpoolReader",
+    "SpoolWriter",
+    "Decoder",
+    "Encoder",
+    "RawFrame",
+    "RawSample",
+]

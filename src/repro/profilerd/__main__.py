@@ -1,0 +1,129 @@
+"""``python -m repro.profilerd`` — attach the profiling daemon to a running job.
+
+Typical flow (the paper's workflow, one process over):
+
+  # terminal 1: run a job that publishes raw frames to a spool
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --profile \\
+      --backend daemon --spool /tmp/serve.spool
+
+  # terminal 2: attach, watch live hot paths, get a report at the end
+  PYTHONPATH=src python -m repro.profilerd attach --spool /tmp/serve.spool --follow
+
+Subcommands:
+
+  attach  — drain the spool until the target says BYE (or dies), publishing
+            status.json / tree.json / events.jsonl / report.html under --out
+            (default <spool>.d); --follow prints live hot paths.
+  status  — print the latest status.json published by a running daemon.
+  report  — render an HTML report from a previously dumped tree.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.core.detector import Rule
+
+from .daemon import DaemonConfig, ProfilerDaemon
+from .spool import SpoolError
+
+
+def _print_status(d: ProfilerDaemon) -> None:
+    s = d.status()
+    state = "STALLED" if s["stalled"] else ("done" if s["done"] else "live")
+    print(
+        f"[profilerd] pid={s['pid']} {state} stacks={s['n_stacks']} "
+        f"dropped={s['dropped_batches']} events={len(d.events)}"
+    )
+    for hp in s["hot_paths"][:5]:
+        print(f"  {hp['share']:7.2%}  {'/'.join(hp['path'])}")
+
+
+def cmd_attach(args) -> int:
+    rules = [Rule(threshold=args.threshold, consecutive=args.consecutive)]
+    cfg = DaemonConfig(
+        spool_path=args.spool,
+        out_dir=args.out,
+        publish_interval_s=args.interval,
+        collapse_origins=tuple(o for o in (args.collapse or "").split(",") if o),
+        rules=rules,
+        stall_timeout_s=args.stall_timeout,
+        attach_timeout_s=args.attach_timeout,
+        max_seconds=args.max_seconds,
+    )
+    daemon = ProfilerDaemon(cfg)
+    try:
+        tree = daemon.run(on_publish=_print_status if args.follow else None)
+    except SpoolError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return 1
+    out = cfg.resolved_out_dir()
+    print(f"[profilerd] merged {daemon.n_stacks} stacks -> {os.path.join(out, 'tree.json')}")
+    print(f"[profilerd] report: {os.path.join(out, 'report.html')}")
+    for ev in daemon.events:
+        print(f"[profilerd] event: {json.dumps(ev)}")
+    if tree.total() > 0:
+        print(tree.render(min_share=0.02, max_depth=4))
+    return 0
+
+
+def cmd_status(args) -> int:
+    path = os.path.join(args.out, "status.json")
+    try:
+        with open(path) as f:
+            print(json.dumps(json.load(f), indent=1))
+    except OSError as e:
+        print(f"no status at {path}: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_report(args) -> int:
+    from repro.core.calltree import CallTree
+    from repro.core.report import render_html
+
+    with open(args.tree) as f:
+        tree = CallTree.from_json(f.read())
+    out = args.html or (os.path.splitext(args.tree)[0] + ".html")
+    with open(out, "w") as f:
+        f.write(render_html(tree, title=os.path.basename(args.tree)))
+    print(out)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.profilerd", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    at = sub.add_parser("attach", help="attach to a spool and stream until the target exits")
+    at.add_argument("--spool", required=True, help="spool file the target publishes to")
+    at.add_argument("--out", default=None, help="artifact dir (default: <spool>.d)")
+    at.add_argument("--interval", type=float, default=1.0, help="publish/analysis window seconds")
+    at.add_argument("--collapse", default="", help="comma-separated origins to fold (e.g. py,jax)")
+    at.add_argument("--threshold", type=float, default=0.9, help="dominance-rule threshold")
+    at.add_argument("--consecutive", type=int, default=2, help="windows before a rule fires")
+    at.add_argument("--stall-timeout", type=float, default=5.0,
+                    help="seconds of silence from a live target before TARGET_STALLED")
+    at.add_argument("--attach-timeout", type=float, default=30.0)
+    at.add_argument("--max-seconds", type=float, default=None, help="bound the attach run")
+    at.add_argument("--follow", action="store_true", help="print live hot paths every window")
+    at.set_defaults(fn=cmd_attach)
+
+    st = sub.add_parser("status", help="print the latest published status.json")
+    st.add_argument("--out", required=True, help="daemon artifact dir")
+    st.set_defaults(fn=cmd_status)
+
+    rp = sub.add_parser("report", help="render HTML from a dumped tree.json")
+    rp.add_argument("--tree", required=True)
+    rp.add_argument("--html", default=None)
+    rp.set_defaults(fn=cmd_report)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

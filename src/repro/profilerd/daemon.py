@@ -1,0 +1,316 @@
+"""The profiling daemon: live streaming aggregation in a separate process.
+
+Drains the target's spool, resolves and classifies symbols with an
+interned-symbol cache (:mod:`repro.profilerd.resolver`), merges every sample
+into a :class:`~repro.core.calltree.CallTree`, keeps a ring of windowed
+snapshots driving :class:`~repro.core.detector.DominanceDetector` rules
+out-of-process, and publishes:
+
+* ``status.json`` — live hot paths, depth-timeline tail, detector verdicts,
+  drop/ingest counters (atomically replaced every publish interval);
+* ``tree.json``   — the full merged tree (the drivers' ``snapshot()`` reads
+  this, so the in-process watchdog works unchanged with the daemon backend);
+* ``events.jsonl``— append-only anomaly log;
+* ``report.html`` / final ``tree.json`` — on-demand / at shutdown via
+  :func:`~repro.core.report.render_html`.
+
+Because the daemon is a separate process it also detects the one failure an
+in-process helper thread cannot: a target whose interpreter is fully wedged
+(GIL held in native code, SIGSTOP, hard livelock).  The agent goes silent,
+the spool stops advancing, and after ``stall_timeout_s`` the daemon emits a
+``TARGET_STALLED`` verdict — see ``examples/hang_detection.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.calltree import CallTree
+from repro.core.detector import DominanceDetector, Rule
+
+from .resolver import SymbolResolver
+from .spool import SpoolReader
+from .wire import Bye, Decoder, Hello, RawSample, Rusage
+
+STALLED = "TARGET_STALLED"
+
+
+def spawn_attached_daemon(
+    spool_path: str,
+    out_dir: Optional[str] = None,
+    *,
+    interval_s: float = 1.0,
+    collapse_origins: Sequence[str] = (),
+    stall_timeout_s: Optional[float] = None,
+    cwd: Optional[str] = None,
+):
+    """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
+
+    The one place that knows the spawn recipe (absolute source root on
+    PYTHONPATH so a relative one still resolves from any cwd, CPU-only JAX,
+    flag spelling) — used by both :class:`~repro.profilerd.agent.DaemonBackend`
+    and the launcher's per-host attach.  Returns the ``subprocess.Popen``.
+    """
+    import subprocess
+    import sys
+
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [
+        sys.executable, "-m", "repro.profilerd", "attach",
+        "--spool", spool_path,
+        "--out", out_dir or f"{spool_path}.d",
+        "--interval", str(interval_s),
+    ]
+    if collapse_origins:
+        cmd += ["--collapse", ",".join(collapse_origins)]
+    if stall_timeout_s is not None:
+        cmd += ["--stall-timeout", str(stall_timeout_s)]
+    return subprocess.Popen(
+        cmd, cwd=cwd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL
+    )
+
+
+@dataclass
+class DaemonConfig:
+    spool_path: str
+    out_dir: Optional[str] = None  # default: "<spool_path>.d"
+    publish_interval_s: float = 1.0
+    drain_interval_s: float = 0.05
+    collapse_origins: tuple[str, ...] = ()
+    rules: Optional[Sequence[Rule]] = None
+    # No fresh samples for this long while the target is alive => stalled.
+    stall_timeout_s: float = 5.0
+    attach_timeout_s: float = 30.0
+    max_seconds: Optional[float] = None  # bound the run (tests/benchmarks)
+    hot_k: int = 10
+    timeline_cap: int = 2048
+    window_ring: int = 32
+
+    def resolved_out_dir(self) -> str:
+        return self.out_dir or f"{self.spool_path}.d"
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def _atomic_write(path: str, text: str) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+
+
+class ProfilerDaemon:
+    """Streaming aggregator over one target's spool."""
+
+    def __init__(self, cfg: DaemonConfig):
+        self.cfg = cfg
+        self.out_dir = cfg.resolved_out_dir()
+        os.makedirs(self.out_dir, exist_ok=True)
+        self.reader: Optional[SpoolReader] = None
+        self.decoder = Decoder()
+        self.resolver = SymbolResolver(cfg.collapse_origins)
+        self.tree = CallTree()
+        self.detector = DominanceDetector(list(cfg.rules) if cfg.rules else [Rule()])
+        self.detector.add_callback(self._on_anomaly)
+        self.events: list[dict] = []
+        self.timeline: deque = deque(maxlen=cfg.timeline_cap)
+        self.rusage: deque = deque(maxlen=cfg.timeline_cap)
+        # Ring of windowed snapshots: (wall_time, cumulative-tree copy).  The
+        # detector diffs consecutive entries internally; the ring also serves
+        # retrospective "what changed in the last N windows" queries.
+        self.windows: deque = deque(maxlen=cfg.window_ring)
+        self.target_pid = 0
+        self.period_s = 0.0
+        self.n_stacks = 0
+        self.dropped_batches = 0
+        self.n_ticks_reported = 0  # from BYE
+        self.bye_seen = False
+        self._last_sample_wall: Optional[float] = None
+        self._samples_since_publish = 0
+        self._stalled = False
+        self._t_start = time.monotonic()
+
+    # -- event plumbing ------------------------------------------------------
+
+    def _on_anomaly(self, ev) -> None:
+        self._record_event(
+            {
+                "kind": ev.kind,
+                "path": list(ev.path),
+                "share": ev.share,
+                "window": ev.window_index,
+                "wall_time": ev.wall_time,
+            }
+        )
+
+    def _record_event(self, ev: dict) -> None:
+        self.events.append(ev)
+        try:
+            with open(os.path.join(self.out_dir, "events.jsonl"), "a") as f:
+                f.write(json.dumps(ev) + "\n")
+        except OSError:
+            pass
+
+    # -- ingest --------------------------------------------------------------
+
+    def attach(self) -> "ProfilerDaemon":
+        self.reader = SpoolReader.wait_for(self.cfg.spool_path, self.cfg.attach_timeout_s)
+        self.target_pid = self.reader.writer_pid
+        # Silence (stall detection) and max_seconds count from the moment the
+        # target's spool appeared — a target launched long after the daemon
+        # must not start life looking stalled.
+        self._t_start = time.monotonic()
+        return self
+
+    def _apply(self, ev) -> None:
+        if isinstance(ev, RawSample):
+            stack = self.resolver.resolve_stack(ev.frames)
+            self.tree.add_stack([f"thread::{ev.thread_name}"] + stack)
+            self.timeline.append((ev.t, len(stack)))
+            self.n_stacks += 1
+            self._samples_since_publish += 1
+            self._last_sample_wall = time.monotonic()
+            self._stalled = False
+        elif isinstance(ev, Hello):
+            self.target_pid = ev.pid
+            self.period_s = ev.period_s
+        elif isinstance(ev, Rusage):
+            self.rusage.append((ev.t, ev.cpu_s, ev.rss_bytes))
+        elif isinstance(ev, Bye):
+            self.bye_seen = True
+            self.n_ticks_reported = ev.n_ticks
+
+    def drain(self) -> int:
+        """Pull everything currently in the spool; returns stacks ingested."""
+        assert self.reader is not None, "attach() first"
+        before = self.n_stacks
+        while True:
+            chunk = self.reader.read()
+            if not chunk:
+                break
+            for ev in self.decoder.feed(chunk):
+                self._apply(ev)
+        self.dropped_batches = self.reader.dropped
+        # The writer sets the header flag even when the BYE *record* was
+        # dropped on a full spool; once drained, honor it so a cleanly
+        # stopped target is never mistaken for a stalled one.
+        if self.reader.bye_seen:
+            self.bye_seen = True
+        return self.n_stacks - before
+
+    # -- analysis / publication ---------------------------------------------
+
+    def _check_stall(self) -> None:
+        if self.bye_seen or self._stalled:
+            return
+        ref = self._last_sample_wall
+        if ref is None:
+            ref = self._t_start  # attached but never saw a sample
+        silent = time.monotonic() - ref
+        # A slow-ticking but healthy target must not look stalled: silence is
+        # only suspicious once it clearly exceeds the publisher's own period.
+        timeout = max(self.cfg.stall_timeout_s, 3.0 * self.period_s)
+        if silent >= timeout and _pid_alive(self.target_pid):
+            self._stalled = True
+            self._record_event(
+                {
+                    "kind": STALLED,
+                    "path": [],
+                    "share": 1.0,
+                    "silent_s": round(silent, 3),
+                    "pid": self.target_pid,
+                    "wall_time": time.time(),
+                }
+            )
+
+    def publish(self) -> None:
+        """One analysis window: detector verdicts + status/tree artifacts."""
+        if self._samples_since_publish:
+            snap = self.tree.copy()
+            self.windows.append((time.time(), snap))
+            self.detector.observe(snap)
+            self._samples_since_publish = 0
+        self._check_stall()
+        _atomic_write(os.path.join(self.out_dir, "tree.json"), self.tree.to_json())
+        _atomic_write(os.path.join(self.out_dir, "status.json"), json.dumps(self.status()))
+
+    def status(self) -> dict:
+        return {
+            "pid": self.target_pid,
+            "alive": _pid_alive(self.target_pid),
+            "stalled": self._stalled,
+            "done": self.bye_seen,
+            "period_s": self.period_s,
+            "n_stacks": self.n_stacks,
+            "n_ticks": self.n_ticks_reported,
+            "dropped_batches": self.dropped_batches,
+            "resolver": {"hits": self.resolver.hits, "misses": self.resolver.misses},
+            "hot_paths": [
+                {"path": list(p), "share": round(s, 4)}
+                for p, s in self.tree.hot_paths(k=self.cfg.hot_k)
+            ],
+            "depth_timeline": [[round(t, 4), d] for t, d in self.timeline],
+            "events": self.events[-20:],
+            "windows": len(self.windows),
+            "updated": time.time(),
+        }
+
+    def write_report(self, name: str = "report") -> str:
+        from repro.core.report import render_html
+
+        path = os.path.join(self.out_dir, f"{name}.html")
+        _atomic_write(
+            path, render_html(self.tree, title=f"profilerd pid={self.target_pid}")
+        )
+        return path
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, on_publish=None) -> CallTree:
+        """Attach, stream until BYE / target death / ``max_seconds``, then
+        final-publish and write the HTML report.  Returns the merged tree."""
+        if self.reader is None:
+            self.attach()
+        next_publish = time.monotonic() + self.cfg.publish_interval_s
+        while True:
+            self.drain()
+            now = time.monotonic()
+            if now >= next_publish:
+                self.publish()
+                if on_publish is not None:
+                    on_publish(self)
+                next_publish = now + self.cfg.publish_interval_s
+            if self.bye_seen:  # drain() above already emptied the spool
+                break
+            if self.cfg.max_seconds is not None and now - self._t_start >= self.cfg.max_seconds:
+                break
+            if not _pid_alive(self.target_pid):
+                self.drain()  # the target died: salvage what it left behind
+                break
+            time.sleep(self.cfg.drain_interval_s)
+        self.drain()
+        self.publish()
+        if on_publish is not None:
+            on_publish(self)
+        self.write_report()
+        if self.reader is not None:
+            self.reader.close()
+        return self.tree

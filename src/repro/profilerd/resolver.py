@@ -1,0 +1,46 @@
+"""Daemon-side symbol resolution with an interned-symbol cache.
+
+Turns raw ``(filename, func)`` pairs into the same ``origin::name`` symbols
+the in-process thread backend produces (:func:`repro.core.sampler.frame_symbol`),
+then applies the same ``collapse_origins`` folding
+(:func:`repro.core.sampler.collapse_stack`).  Parity with the thread backend
+is a tested invariant: the two backends must build identical trees from
+identical frames.
+
+The cache interns on the *(filename, func)* pair; classification runs once
+per unique pair and resolved symbol strings are shared between all stacks
+that reference them, so steady-state resolution is two dict hits per frame.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Iterable, Sequence
+
+from repro.core.sampler import classify_frame, collapse_stack
+
+from .wire import RawFrame
+
+
+class SymbolResolver:
+    def __init__(self, collapse_origins: Sequence[str] = ()):
+        self.collapse_origins = tuple(collapse_origins)
+        self._cache: dict[tuple[str, str], str] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def symbol(self, filename: str, func: str) -> str:
+        key = (filename, func)
+        sym = self._cache.get(key)
+        if sym is None:
+            self.misses += 1
+            sym = sys.intern(f"{classify_frame(filename)}::{func}")
+            self._cache[key] = sym
+        else:
+            self.hits += 1
+        return sym
+
+    def resolve_stack(self, frames: Iterable[RawFrame]) -> list[str]:
+        """Raw frames (root -> leaf) to collapsed symbol stack (root -> leaf)."""
+        syms = [self.symbol(f.filename, f.func) for f in frames]
+        return collapse_stack(syms, self.collapse_origins)

@@ -1,0 +1,222 @@
+"""Binary codec for raw frame records (target -> daemon).
+
+Design constraints (ISSUE / paper §III):
+
+* the target side must do **no symbol resolution** — records carry raw
+  ``(filename, func, lineno)`` triples; the daemon resolves and classifies;
+* strings are interned: each unique string crosses the wire once as a
+  ``STRDEF`` record and is referenced by id afterwards, so steady-state
+  samples are a few bytes per frame;
+* records are self-delimiting (``u32`` length prefix), so the same byte
+  stream works over the mmap ring spool *or* length-prefixed frames on a
+  Unix-domain socket — the transport can swap without touching the codec;
+* a dropped batch must not poison the stream: the encoder interns strings
+  *transactionally* (``encode_tick`` returns the newly-defined strings; the
+  caller rolls them back if the transport rejected the batch), and the
+  decoder maps unknown ids to ``"?"`` instead of failing.
+
+Record layout (little-endian):
+
+====== ========== ===========================================================
+kind   name       payload
+====== ========== ===========================================================
+1      HELLO      u32 version, u32 pid, f64 period_s
+2      STRDEF     u32 id, u16 len, utf-8 bytes
+3      SAMPLE     f64 t, u64 tid, u32 thread_name_id, u16 nframes,
+                  nframes * (u32 file_id, u32 func_id, u32 lineno);
+                  frames ordered root -> leaf
+4      RUSAGE     f64 t, f64 cpu_s, u64 rss_bytes
+5      BYE        u64 n_ticks (publisher ticks over the whole session)
+====== ========== ===========================================================
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, Optional, Sequence, Union
+
+WIRE_VERSION = 1
+
+K_HELLO = 1
+K_STRDEF = 2
+K_SAMPLE = 3
+K_RUSAGE = 4
+K_BYE = 5
+
+_LEN = struct.Struct("<I")
+_KIND = struct.Struct("<B")
+_HELLO = struct.Struct("<IId")
+_STRDEF_HDR = struct.Struct("<IH")
+_SAMPLE_HDR = struct.Struct("<dQIH")
+_FRAME = struct.Struct("<III")
+_RUSAGE = struct.Struct("<ddQ")
+_BYE = struct.Struct("<Q")
+
+UNKNOWN = "?"
+
+
+@dataclass(frozen=True)
+class RawFrame:
+    """One unresolved frame, exactly what the target can read for free."""
+
+    filename: str
+    func: str
+    lineno: int
+
+
+@dataclass
+class RawSample:
+    """One thread's stack at one tick, root -> leaf."""
+
+    t: float
+    tid: int
+    thread_name: str
+    frames: list[RawFrame] = field(default_factory=list)
+
+
+@dataclass
+class Hello:
+    version: int
+    pid: int
+    period_s: float
+
+
+@dataclass
+class Rusage:
+    t: float
+    cpu_s: float
+    rss_bytes: int
+
+
+@dataclass
+class Bye:
+    n_ticks: int
+
+
+Event = Union[Hello, RawSample, Rusage, Bye]
+
+
+def _record(kind: int, payload: bytes) -> bytes:
+    body = _KIND.pack(kind) + payload
+    return _LEN.pack(len(body)) + body
+
+
+class Encoder:
+    """Target-side encoder with a transactional string-intern table."""
+
+    def __init__(self) -> None:
+        self._ids: dict[str, int] = {}
+        self._next_id = 0
+
+    def _intern(self, s: str, out: list[bytes], fresh: list[str]) -> int:
+        sid = self._ids.get(s)
+        if sid is None:
+            sid = self._next_id
+            self._next_id += 1
+            self._ids[s] = sid
+            raw = s.encode("utf-8", "replace")[: 0xFFFF]
+            out.append(_record(K_STRDEF, _STRDEF_HDR.pack(sid, len(raw)) + raw))
+            fresh.append(s)
+        return sid
+
+    def rollback(self, fresh: Iterable[str]) -> None:
+        """Forget strings interned by a batch the transport rejected.
+
+        Ids are never reused (``_next_id`` keeps growing), so a later
+        re-definition of the same string cannot collide with the dropped one.
+        """
+        for s in fresh:
+            self._ids.pop(s, None)
+
+    def encode_hello(self, pid: int, period_s: float) -> bytes:
+        return _record(K_HELLO, _HELLO.pack(WIRE_VERSION, pid, period_s))
+
+    def encode_tick(
+        self, samples: Sequence[RawSample], rusage: Optional[Rusage] = None
+    ) -> tuple[bytes, list[str]]:
+        """Encode one tick's samples as a single batch.
+
+        Returns ``(payload, fresh_strings)``; the caller must either commit
+        the whole payload to the transport or call :meth:`rollback` with
+        ``fresh_strings``.
+        """
+        out: list[bytes] = []
+        fresh: list[str] = []
+        for s in samples:
+            name_id = self._intern(s.thread_name, out, fresh)
+            body = [_SAMPLE_HDR.pack(s.t, s.tid, name_id, len(s.frames))]
+            for f in s.frames:
+                body.append(
+                    _FRAME.pack(
+                        self._intern(f.filename, out, fresh),
+                        self._intern(f.func, out, fresh),
+                        f.lineno,
+                    )
+                )
+            out.append(_record(K_SAMPLE, b"".join(body)))
+        if rusage is not None:
+            out.append(_record(K_RUSAGE, _RUSAGE.pack(rusage.t, rusage.cpu_s, rusage.rss_bytes)))
+        return b"".join(out), fresh
+
+    def encode_bye(self, n_ticks: int) -> bytes:
+        return _record(K_BYE, _BYE.pack(n_ticks))
+
+
+class Decoder:
+    """Streaming decoder: feed arbitrary byte chunks, get events out."""
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+        self._strings: dict[int, str] = {}
+
+    def _string(self, sid: int) -> str:
+        return self._strings.get(sid, UNKNOWN)
+
+    def feed(self, data: bytes) -> Iterator[Event]:
+        self._buf.extend(data)
+        # Walk an offset and trim once at the end: draining a multi-MiB spool
+        # backlog arrives as one chunk, and a per-record front-trim would make
+        # that O(n^2) in buffer size.
+        off = 0
+        try:
+            while True:
+                if len(self._buf) - off < _LEN.size:
+                    return
+                (n,) = _LEN.unpack_from(self._buf, off)
+                if len(self._buf) - off < _LEN.size + n:
+                    return
+                start = off + _LEN.size
+                body = bytes(self._buf[start : start + n])
+                off = start + n
+                ev = self._decode(body[0], body[1:])
+                if ev is not None:
+                    yield ev
+        finally:
+            del self._buf[:off]
+
+    def _decode(self, kind: int, payload: bytes) -> Optional[Event]:
+        if kind == K_STRDEF:
+            sid, n = _STRDEF_HDR.unpack_from(payload, 0)
+            off = _STRDEF_HDR.size
+            self._strings[sid] = payload[off : off + n].decode("utf-8", "replace")
+            return None
+        if kind == K_SAMPLE:
+            t, tid, name_id, nframes = _SAMPLE_HDR.unpack_from(payload, 0)
+            off = _SAMPLE_HDR.size
+            frames = []
+            for _ in range(nframes):
+                fid, qid, lineno = _FRAME.unpack_from(payload, off)
+                off += _FRAME.size
+                frames.append(RawFrame(self._string(fid), self._string(qid), lineno))
+            return RawSample(t, tid, self._string(name_id), frames)
+        if kind == K_HELLO:
+            version, pid, period_s = _HELLO.unpack(payload)
+            return Hello(version, pid, period_s)
+        if kind == K_RUSAGE:
+            t, cpu_s, rss = _RUSAGE.unpack(payload)
+            return Rusage(t, cpu_s, rss)
+        if kind == K_BYE:
+            (n_ticks,) = _BYE.unpack(payload)
+            return Bye(n_ticks)
+        return None  # unknown kinds are skipped, forward-compatibly

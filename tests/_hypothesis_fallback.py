@@ -1,0 +1,77 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite only use a small strategy subset
+(``lists``/``sampled_from``/``integers``) plus ``@given``/``@settings``.  When
+the real library is available the test modules import it; otherwise they fall
+back to this shim, which replays each property over a fixed number of
+deterministically-seeded random examples.  That keeps the properties exercised
+everywhere (CI images without the ``[test]`` extra included) instead of
+skipping whole modules.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A strategy is just a draw function: rng -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self.draw = draw
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [elem.draw(rng) for _ in range(rng.randint(min_size, max_size))]
+        )
+
+
+def given(*strategies_: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + i)
+                drawn = [s.draw(rng) for s in strategies_]
+                fn(*args, *drawn, **kwargs)
+
+        wrapper._hypothesis_fallback = True
+        # Hide the strategy-filled trailing parameters from pytest, which
+        # would otherwise try to resolve them as fixtures (`self` survives).
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[: len(params) - len(strategies_)]
+        wrapper.__signature__ = inspect.Signature(kept)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

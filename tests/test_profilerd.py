@@ -1,0 +1,375 @@
+"""repro.profilerd tests: wire codec, spool, daemon lifecycle, backend parity.
+
+The invariants the ISSUE pins down:
+
+* codec roundtrip — raw frames -> codec -> resolver yields symbols identical
+  to the in-process backend's ``frame_symbol``/``collapse_stack`` path;
+* spool — SPSC ring with wraparound, and a full spool drops whole batches
+  with exact accounting (nothing is half-written, nothing is lost silently);
+* daemon lifecycle — attach -> sample -> drain -> stop; every stack the agent
+  committed to the spool reaches the daemon's tree;
+* parity — thread and daemon backends build equivalent trees for the same
+  deterministic workload (a worker parked in a stable deep stack);
+* out-of-process — `python -m repro.profilerd attach` drains a live target
+  from a separate process, and a silent-but-alive target is flagged
+  ``TARGET_STALLED`` (the wedged-interpreter case).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import CallTree, SamplerConfig, StackSampler, collapse_stack, frame_symbol, make_sampler
+from repro.profilerd.agent import Agent, DaemonBackend
+from repro.profilerd.daemon import STALLED, DaemonConfig, ProfilerDaemon
+from repro.profilerd.resolver import SymbolResolver
+from repro.profilerd.spool import SpoolReader, SpoolWriter
+from repro.profilerd.wire import Bye, Decoder, Encoder, Hello, RawFrame, RawSample
+
+SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def parked_worker(depth_a_evt):
+    """Park a thread in a recognizable, stable 3-deep stack."""
+
+    def parked_level_one():
+        parked_level_two()
+
+    def parked_level_two():
+        parked_level_three()
+
+    def parked_level_three():
+        depth_a_evt.wait()
+
+    parked_level_one()
+
+
+@pytest.fixture
+def parked():
+    evt = threading.Event()
+    t = threading.Thread(target=parked_worker, args=(evt,), name="parked-worker", daemon=True)
+    t.start()
+    time.sleep(0.05)  # let it reach the wait
+    yield t
+    evt.set()
+    t.join(timeout=5)
+
+
+class TestWireCodec:
+    def frames(self):
+        return [
+            RawFrame("/usr/lib/python3/threading.py", "run", 10),
+            RawFrame("/site-packages/jax/api.py", "jit", 20),
+            RawFrame("/root/repo/src/repro/models/model.py", "forward", 30),
+        ]
+
+    def test_roundtrip_single_tick(self):
+        enc, dec = Encoder(), Decoder()
+        samples = [RawSample(1.5, 42, "MainThread", self.frames())]
+        payload, fresh = enc.encode_tick(samples)
+        assert fresh  # first tick defines new strings
+        events = list(dec.feed(payload))
+        assert len(events) == 1
+        got = events[0]
+        assert isinstance(got, RawSample)
+        assert got.t == 1.5 and got.tid == 42 and got.thread_name == "MainThread"
+        assert got.frames == self.frames()
+
+    def test_string_interning_across_ticks(self):
+        enc, dec = Encoder(), Decoder()
+        p1, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        p2, fresh2 = enc.encode_tick([RawSample(0.1, 1, "t", self.frames())])
+        assert fresh2 == []  # steady state: no new strings
+        assert len(p2) < len(p1) / 2
+        evs = list(dec.feed(p1 + p2))
+        assert [e.frames for e in evs] == [self.frames(), self.frames()]
+
+    def test_chunked_feed_reassembles_partial_records(self):
+        enc, dec = Encoder(), Decoder()
+        payload, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        events = []
+        for i in range(0, len(payload), 3):  # drip-feed 3 bytes at a time
+            events.extend(dec.feed(payload[i : i + 3]))
+        assert len(events) == 1 and events[0].frames == self.frames()
+
+    def test_rollback_keeps_stream_decodable(self):
+        """A dropped batch must not leave dangling string ids."""
+        enc, dec = Encoder(), Decoder()
+        dropped, fresh = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        enc.rollback(fresh)  # transport rejected the batch; it is never fed
+        kept, _ = enc.encode_tick([RawSample(0.1, 1, "t", self.frames())])
+        evs = list(dec.feed(kept))
+        assert len(evs) == 1 and evs[0].frames == self.frames()
+
+    def test_hello_bye_roundtrip(self):
+        enc, dec = Encoder(), Decoder()
+        evs = list(dec.feed(enc.encode_hello(1234, 0.5) + enc.encode_bye(77)))
+        assert isinstance(evs[0], Hello) and evs[0].pid == 1234 and evs[0].period_s == 0.5
+        assert isinstance(evs[1], Bye) and evs[1].n_ticks == 77
+
+    def test_resolver_matches_thread_backend_symbols(self, parked):
+        """Raw capture -> codec -> resolver == frame_symbol on the same frame."""
+        frame = sys._current_frames()[parked.ident]
+        # thread-backend path
+        expected = StackSampler(SamplerConfig(period_s=10))._stack_of(frame)
+        # daemon path: raw walk (as the agent does) -> encode -> decode -> resolve
+        raw, f = [], frame
+        while f is not None:
+            raw.append(RawFrame(f.f_code.co_filename, f.f_code.co_name, f.f_lineno))
+            f = f.f_back
+        raw.reverse()
+        payload, _ = Encoder().encode_tick([RawSample(0.0, parked.ident, "w", raw)])
+        (sample,) = list(Decoder().feed(payload))
+        assert SymbolResolver().resolve_stack(sample.frames) == expected
+
+    def test_resolver_collapse_matches_thread_backend(self, parked):
+        frame = sys._current_frames()[parked.ident]
+        expected = StackSampler(
+            SamplerConfig(period_s=10, collapse_origins=("py",))
+        )._stack_of(frame)
+        raw, f = [], frame
+        while f is not None:
+            raw.append(RawFrame(f.f_code.co_filename, f.f_code.co_name, f.f_lineno))
+            f = f.f_back
+        raw.reverse()
+        got = SymbolResolver(("py",)).resolve_stack(raw)
+        assert got == expected
+        assert "py::*" in got
+
+
+class TestSpool:
+    def test_write_read_roundtrip(self, tmp_path):
+        p = str(tmp_path / "s.spool")
+        w = SpoolWriter(p, capacity=1024)
+        r = SpoolReader(p)
+        assert w.write(b"hello") and w.write(b"world")
+        assert r.read() == b"helloworld"
+        assert r.read() == b""
+
+    def test_wraparound(self, tmp_path):
+        p = str(tmp_path / "s.spool")
+        w = SpoolWriter(p, capacity=64)
+        r = SpoolReader(p)
+        blob = bytes(range(48))
+        for _ in range(10):  # 480 bytes through a 64-byte ring
+            assert w.write(blob)
+            assert r.read() == blob
+        assert w.dropped == 0
+
+    def test_full_spool_drops_whole_batches_with_accounting(self, tmp_path):
+        p = str(tmp_path / "s.spool")
+        w = SpoolWriter(p, capacity=100)
+        committed = []
+        for i in range(10):
+            payload = bytes([i]) * 40
+            if w.write(payload):
+                committed.append(payload)
+        assert len(committed) == 2  # 2*40 fit, the rest dropped
+        assert w.dropped == 8
+        r = SpoolReader(p)
+        assert r.dropped == 8
+        assert r.read() == b"".join(committed)  # no partial writes
+
+    def test_reader_waits_for_writer(self, tmp_path):
+        p = str(tmp_path / "late.spool")
+
+        def create_late():
+            time.sleep(0.2)
+            SpoolWriter(p, capacity=256).write(b"x")
+
+        threading.Thread(target=create_late, daemon=True).start()
+        r = SpoolReader.wait_for(p, timeout_s=5)
+        deadline = time.monotonic() + 5
+        data = b""
+        while not data and time.monotonic() < deadline:
+            data = r.read()
+            time.sleep(0.01)
+        assert data == b"x"
+
+
+class TestDaemonLifecycle:
+    def test_attach_sample_drain_stop_no_loss(self, tmp_path, parked):
+        """Every stack the agent committed reaches the daemon's tree."""
+        spool = str(tmp_path / "t.spool")
+        agent = Agent(spool, period_s=10, spool_bytes=1 << 20)
+        committed = 0
+        for _ in range(25):
+            committed += agent.tick()
+        agent.stop()
+        assert agent.n_dropped_batches == 0
+
+        daemon = ProfilerDaemon(
+            DaemonConfig(spool_path=spool, out_dir=str(tmp_path / "out"), max_seconds=10)
+        )
+        tree = daemon.run()
+        assert daemon.bye_seen
+        assert daemon.n_ticks_reported == 25
+        assert daemon.n_stacks == committed
+        assert tree.total() == committed
+        # the parked worker's stable stack must be a hot path
+        flat = tree.flatten()
+        assert any("parked_level_three" in k for k in flat)
+
+    def test_full_spool_loses_batches_but_not_correctness(self, tmp_path, parked):
+        """Tiny spool, no reader: batches drop; the ingested count matches
+        exactly what was committed (drop accounting, no corruption)."""
+        spool = str(tmp_path / "t.spool")
+        agent = Agent(spool, period_s=10, spool_bytes=4096)
+        committed = 0
+        for _ in range(400):
+            committed += agent.tick()
+        agent.stop()
+        assert agent.n_dropped_batches > 0  # the spool did fill
+
+        daemon = ProfilerDaemon(
+            DaemonConfig(spool_path=spool, out_dir=str(tmp_path / "out"), max_seconds=10)
+        )
+        tree = daemon.run()
+        assert tree.total() == committed > 0
+        # With no reader draining, the BYE *record* may itself have been
+        # dropped (one extra drop beyond the agent's tick-drop count), but the
+        # spool-header flag still marks the shutdown as clean.
+        assert daemon.bye_seen
+        assert daemon.dropped_batches in (
+            agent.n_dropped_batches,
+            agent.n_dropped_batches + 1,
+        )
+
+    def test_stall_verdict_for_silent_live_target(self, tmp_path):
+        """Agent goes quiet without BYE while its pid is alive -> TARGET_STALLED.
+
+        The declared period matters: silence only counts as a stall once it
+        clearly exceeds the publisher's own cadence (3x), so a slow-ticking
+        healthy target is never flagged."""
+        spool = str(tmp_path / "t.spool")
+        agent = Agent(spool, period_s=0.02)
+        agent.tick()
+        # no agent.stop(): the 'target' (this test process) wedges silently
+        daemon = ProfilerDaemon(
+            DaemonConfig(
+                spool_path=spool,
+                out_dir=str(tmp_path / "out"),
+                publish_interval_s=0.05,
+                stall_timeout_s=0.2,
+                max_seconds=3.0,
+            )
+        )
+        daemon.run()
+        kinds = [e["kind"] for e in daemon.events]
+        assert STALLED in kinds
+
+    def test_artifacts_published(self, tmp_path, parked):
+        spool = str(tmp_path / "t.spool")
+        agent = Agent(spool, period_s=10)
+        for _ in range(5):
+            agent.tick()
+        agent.stop()
+        out = str(tmp_path / "out")
+        ProfilerDaemon(DaemonConfig(spool_path=spool, out_dir=out, max_seconds=10)).run()
+        assert sorted(os.listdir(out)) == ["report.html", "status.json", "tree.json"]
+        status = json.load(open(os.path.join(out, "status.json")))
+        assert status["done"] and status["n_stacks"] > 0 and status["hot_paths"]
+        tree = CallTree.from_json(open(os.path.join(out, "tree.json")).read())
+        assert tree.total() == status["n_stacks"]
+
+
+class TestBackendParity:
+    def _worker_subtree(self, tree, name="thread::parked-worker"):
+        node = tree.root.children.get(name)
+        assert node is not None, f"{name} missing; saw {list(tree.root.children)}"
+        return node.to_dict()
+
+    def test_thread_and_daemon_trees_equivalent(self, tmp_path, parked):
+        """Same parked stack sampled N times by both backends -> identical
+        subtrees (structure and counts)."""
+        n = 12
+        cfg = SamplerConfig(period_s=10, collapse_origins=("py",))
+
+        thread_backend = StackSampler(cfg)
+        for _ in range(n):
+            thread_backend.sample_now()
+        thread_tree = thread_backend.snapshot()
+
+        spool = str(tmp_path / "t.spool")
+        agent = Agent(spool, period_s=10)
+        for _ in range(n):
+            agent.tick()
+        agent.stop()
+        daemon = ProfilerDaemon(
+            DaemonConfig(
+                spool_path=spool,
+                out_dir=str(tmp_path / "out"),
+                collapse_origins=cfg.collapse_origins,
+                max_seconds=10,
+            )
+        )
+        daemon_tree = daemon.run()
+
+        assert self._worker_subtree(thread_tree) == self._worker_subtree(daemon_tree)
+
+    def test_make_sampler_backend_selection(self):
+        assert isinstance(make_sampler(SamplerConfig(backend="thread")), StackSampler)
+        s = make_sampler(SamplerConfig(backend="daemon", spool_path="/tmp/x.spool"))
+        assert isinstance(s, DaemonBackend)
+        assert s.spawn_daemon is False  # explicit spool => external daemon
+        with pytest.raises(ValueError):
+            make_sampler(SamplerConfig(backend="perf"))
+
+    def test_env_override_routes_to_external_daemon(self, tmp_path, monkeypatch):
+        spool = str(tmp_path / "env.spool")
+        monkeypatch.setenv("REPRO_PROFILERD_SPOOL", spool)
+        monkeypatch.setenv("REPRO_PROFILERD_PERIOD", "0.123")
+        s = make_sampler(SamplerConfig(backend="thread"))
+        assert isinstance(s, DaemonBackend)
+        assert s.spool_path == spool and s.spawn_daemon is False
+        assert s.config.period_s == 0.123
+
+
+_TARGET = """
+import sys, time
+sys.path.insert(0, {src!r})
+from repro.core import SamplerConfig, make_sampler
+s = make_sampler(SamplerConfig(backend="daemon", spool_path={spool!r},
+                               spawn_daemon=False, period_s=0.02))
+s.start()
+def busy_loop_for_profilerd():
+    t0 = time.monotonic(); x = 0
+    while time.monotonic() - t0 < 1.5:
+        x += 1
+busy_loop_for_profilerd()
+s.stop()
+"""
+
+
+@pytest.mark.slow
+class TestEndToEndCLI:
+    def test_attach_streams_live_target(self, tmp_path):
+        """`python -m repro.profilerd attach` in a separate process drains a
+        live publisher and emits a tree whose hot path is the busy loop."""
+        spool = str(tmp_path / "e2e.spool")
+        out = str(tmp_path / "e2e.out")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        target = subprocess.Popen(
+            [sys.executable, "-c", _TARGET.format(src=SRC_ROOT, spool=spool)], env=env
+        )
+        daemon = subprocess.run(
+            [
+                sys.executable, "-m", "repro.profilerd", "attach",
+                "--spool", spool, "--out", out,
+                "--interval", "0.2", "--max-seconds", "30",
+            ],
+            env=env, capture_output=True, text=True, timeout=60,
+        )
+        assert target.wait(timeout=30) == 0
+        assert daemon.returncode == 0, daemon.stderr
+        tree = CallTree.from_json(open(os.path.join(out, "tree.json")).read())
+        assert tree.total() > 0
+        assert any("busy_loop_for_profilerd" in k for k in tree.flatten())
+        assert os.path.exists(os.path.join(out, "report.html"))
