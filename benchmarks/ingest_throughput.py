@@ -1,0 +1,182 @@
+"""Wire v1 vs v2 decode+ingest throughput and bytes/sample (ISSUE 2).
+
+Steady-state simulator stacks repeat almost verbatim tick after tick — the
+dominance pattern the paper exploits.  Wire v2 interns each unique stack once
+(``STACKDEF``) and references it with a fixed-size ``SAMPLE2``; the daemon
+resolves each ``(thread, stack_id)`` once and replays the cached
+``CallNode`` chain as an O(depth) float-add loop.  This benchmark measures
+both ends across synthetic stack depths and repeat ratios:
+
+* ``bytes_per_sample`` — encoded spool bytes divided by sample count;
+* ``ingest_per_s``     — decode + resolve + tree-merge samples/sec
+  (``Decoder.feed`` -> ``TreeIngestor.ingest``, the daemon's hot loop).
+
+Writes ``BENCH_ingest.json``.  Acceptance floor (depth 32, 95 % repetition):
+v2 must show >= 5x ingest throughput and >= 4x fewer bytes than v1.
+
+Usage::
+
+  PYTHONPATH=src python benchmarks/ingest_throughput.py           # full run
+  PYTHONPATH=src python benchmarks/ingest_throughput.py --smoke   # CI smoke
+
+Pure stdlib + repro.core/profilerd (no jax), so it runs anywhere the test
+suite runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/ingest_throughput.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.profilerd.ingest import TreeIngestor
+from repro.profilerd.wire import Decoder, Encoder, RawFrame, RawSample
+
+DEPTHS = (8, 32, 128)
+REPEATS = (0.5, 0.95)
+TICK_SIZE = 4  # samples per encode_tick batch (threads per tick)
+
+
+def synth_stacks(depth: int, n_unique: int, rng: random.Random) -> list[list[RawFrame]]:
+    """Unique stacks sharing a realistic common root prefix (~3/4 of depth)."""
+    shared = [
+        RawFrame(f"/site-packages/jax/layer{i}.py", f"call_{i}", 10 + i)
+        for i in range(max(1, depth * 3 // 4))
+    ]
+    stacks = []
+    for u in range(n_unique):
+        tail = [
+            RawFrame(f"/root/repo/src/repro/mod{u % 7}.py", f"fn_{u}_{j}", rng.randrange(1, 500))
+            for j in range(depth - len(shared))
+        ]
+        stacks.append(shared + tail)
+    return stacks
+
+
+def synth_samples(depth: int, repeat: float, n: int, seed: int = 0) -> list[RawSample]:
+    """``n`` samples where a ``repeat`` fraction re-uses an already-seen stack.
+
+    Re-drawn stacks get a jittered *leaf* line number, like a real thread
+    actively executing inside its leaf function — interning must key on the
+    (filename, func) sequence for the steady-state win to survive this.
+    """
+    rng = random.Random(seed)
+    n_unique = max(1, round(n * (1.0 - repeat)))
+    stacks = synth_stacks(depth, n_unique, rng)
+    samples = []
+    for i in range(n):
+        # First occurrence of each unique stack is spread over the run; the
+        # rest re-draw from stacks already introduced (steady-state pattern).
+        introduced = max(1, min(n_unique, 1 + i * n_unique // n))
+        u = rng.randrange(introduced)
+        frames = stacks[u]
+        leaf = frames[-1]
+        frames = frames[:-1] + [RawFrame(leaf.filename, leaf.func, rng.randrange(1, 500))]
+        # A stack belongs to the worker thread that executes it (threads
+        # repeat their own stacks) — round-robin assignment would split each
+        # stack across all threads and understate real cache locality.
+        w = u % TICK_SIZE
+        samples.append(RawSample(i * 0.01, 1000 + w, f"worker-{w}", frames))
+    return samples
+
+
+def encode_all(samples: list[RawSample], version: int) -> bytes:
+    enc = Encoder(version=version)
+    out = [enc.encode_hello(1234, 0.5)]
+    for i in range(0, len(samples), TICK_SIZE):
+        payload, _ = enc.encode_tick(samples[i : i + TICK_SIZE])
+        out.append(payload)
+    return b"".join(out)
+
+
+def ingest_all(payload: bytes, chunk: int = 1 << 20) -> tuple[float, TreeIngestor]:
+    """Feed the stream through the daemon's hot loop; returns (seconds, ingestor)."""
+    dec = Decoder()
+    ing = TreeIngestor()
+    t0 = time.perf_counter()
+    for i in range(0, len(payload), chunk):
+        for ev in dec.feed(payload[i : i + chunk]):
+            if type(ev) is RawSample:
+                ing.ingest(ev)
+    return time.perf_counter() - t0, ing
+
+
+def bench_one(depth: int, repeat: float, n: int, reps: int) -> dict:
+    samples = synth_samples(depth, repeat, n)
+    out: dict = {"depth": depth, "repeat": repeat, "n_samples": n}
+    for version in (1, 2):
+        payload = encode_all(samples, version)
+        best = float("inf")
+        ing = None
+        for _ in range(reps):
+            dt, ing = ingest_all(payload)
+            best = min(best, dt)
+        assert ing is not None and ing.tree.total() == n, "ingest lost samples"
+        out[f"v{version}"] = {
+            "bytes": len(payload),
+            "bytes_per_sample": round(len(payload) / n, 2),
+            "ingest_s": round(best, 6),
+            "ingest_per_s": round(n / best, 1),
+            "fast_hits": ing.fast_hits,
+        }
+    out["speedup_ingest"] = round(out["v1"]["ingest_s"] / out["v2"]["ingest_s"], 2)
+    out["bytes_ratio"] = round(out["v1"]["bytes"] / out["v2"]["bytes"], 2)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny iteration counts (CI)")
+    ap.add_argument("--samples", type=int, default=None, help="samples per config")
+    ap.add_argument("--out", default="BENCH_ingest.json")
+    args = ap.parse_args(argv)
+    n = args.samples or (800 if args.smoke else 40000)
+    reps = 1 if args.smoke else 5  # best-of-5: shared-runner wall clocks are noisy
+
+    results = []
+    for depth in DEPTHS:
+        for repeat in REPEATS:
+            r = bench_one(depth, repeat, n, reps)
+            results.append(r)
+            print(
+                f"depth={depth:<4d} repeat={repeat:.2f}  "
+                f"v1={r['v1']['ingest_per_s']:>12,.0f}/s {r['v1']['bytes_per_sample']:>7.1f} B  "
+                f"v2={r['v2']['ingest_per_s']:>12,.0f}/s {r['v2']['bytes_per_sample']:>7.1f} B  "
+                f"speedup={r['speedup_ingest']:.2f}x bytes_ratio={r['bytes_ratio']:.2f}x",
+                flush=True,
+            )
+
+    doc = {
+        "bench": "ingest_throughput",
+        "smoke": args.smoke,
+        "n_samples": n,
+        "tick_size": TICK_SIZE,
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out}")
+
+    # Acceptance floor from the ISSUE (skipped in smoke mode: tiny runs are
+    # timer-noise dominated; CI only checks the harness still runs).
+    key = next(r for r in results if r["depth"] == 32 and r["repeat"] == 0.95)
+    ok = key["speedup_ingest"] >= 5.0 and key["bytes_ratio"] >= 4.0
+    msg = (
+        f"depth32/95%: ingest speedup {key['speedup_ingest']}x (target >=5x), "
+        f"bytes ratio {key['bytes_ratio']}x (target >=4x)"
+    )
+    if args.smoke:
+        print(f"[smoke] {msg}")
+        return 0
+    print(("PASS " if ok else "FAIL ") + msg)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,12 +24,26 @@ Views (paper §III-D):
 
 Trees support ``merge`` (cross-host aggregation) and ``diff`` (windowed deltas
 for the anomaly detector).
+
+Hot-counter fast lane
+---------------------
+
+The host plane bumps exactly one metric (``samples``) on every node of every
+ingested stack, thousands of times per second, while the device plane needs
+the open-ended metrics schema.  ``CallNode`` therefore carries a dedicated
+``samples``/``self_samples`` float pair beside the generalized dicts: the
+cached-path ingestion fast lane (:meth:`CallTree.path_nodes` +
+:meth:`CallTree.add_stack_nodes`, used by the profilerd daemon and the thread
+backend) bumps only those floats — no hashing, no dict churn.  Reading the
+``metrics``/``self_metrics`` properties folds any pending fast-lane counts
+into the dicts first, so every existing consumer (views, reports, JSON,
+detector) sees one coherent metrics mapping and never needs to know the fast
+lane exists.
 """
 
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
 from typing import Callable, Iterable, Iterator, Mapping, Optional, Sequence, Union
 
 Metrics = dict[str, float]
@@ -44,16 +58,73 @@ def _as_predicate(sel: Union[str, FramePredicate]) -> FramePredicate:
     return lambda name: name == sel
 
 
-@dataclass
 class CallNode:
     """One call-site: a function name reached through a unique caller chain."""
 
-    name: str
-    # Inclusive metrics: this node and everything below it.
-    metrics: Metrics = field(default_factory=dict)
-    # Exclusive ("self") metrics: samples whose stack *ended* at this node.
-    self_metrics: Metrics = field(default_factory=dict)
-    children: dict[str, "CallNode"] = field(default_factory=dict)
+    __slots__ = ("name", "samples", "self_samples", "_metrics", "_self_metrics", "children")
+
+    def __init__(
+        self,
+        name: str,
+        metrics: Optional[Metrics] = None,
+        self_metrics: Optional[Metrics] = None,
+        children: Optional[dict[str, "CallNode"]] = None,
+    ):
+        self.name = name
+        # Fast-lane pending counts, folded into the dicts on read.
+        self.samples = 0.0
+        self.self_samples = 0.0
+        self._metrics: Metrics = metrics if metrics is not None else {}
+        self._self_metrics: Metrics = self_metrics if self_metrics is not None else {}
+        self.children: dict[str, "CallNode"] = children if children is not None else {}
+
+    # -- fast-lane / dict coherence -----------------------------------------
+
+    @property
+    def metrics(self) -> Metrics:
+        """Inclusive metrics: this node and everything below it."""
+        if self.samples:
+            m = self._metrics
+            m[SAMPLES] = m.get(SAMPLES, 0.0) + self.samples
+            self.samples = 0.0
+        return self._metrics
+
+    @metrics.setter
+    def metrics(self, value: Metrics) -> None:
+        self.samples = 0.0
+        self._metrics = value
+
+    @property
+    def self_metrics(self) -> Metrics:
+        """Exclusive ("self") metrics: samples whose stack *ended* here."""
+        if self.self_samples:
+            m = self._self_metrics
+            m[SAMPLES] = m.get(SAMPLES, 0.0) + self.self_samples
+            self.self_samples = 0.0
+        return self._self_metrics
+
+    @self_metrics.setter
+    def self_metrics(self, value: Metrics) -> None:
+        self.self_samples = 0.0
+        self._self_metrics = value
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"CallNode({self.name!r}, {self.metrics!r}, {self.self_metrics!r}, "
+            f"children={list(self.children)!r})"
+        )
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, CallNode):
+            return NotImplemented
+        return (
+            self.name == other.name
+            and self.metrics == other.metrics
+            and self.self_metrics == other.self_metrics
+            and self.children == other.children
+        )
+
+    __hash__ = object.__hash__  # identity hash: nodes are mutable accumulators
 
     # -- counter plumbing ---------------------------------------------------
 
@@ -134,12 +205,41 @@ class CallTree:
     def add_stack(self, frames: Sequence[str], metrics: Optional[Mapping[str, float]] = None) -> None:
         """Merge one sample. ``frames`` are ordered root -> leaf."""
         if metrics is None:
-            metrics = {SAMPLES: 1.0}
+            # Host-plane default ({samples: 1}): take the float fast lane.
+            node = self.root
+            node.samples += 1.0
+            for frame in frames:
+                node = node.child(frame)
+                node.samples += 1.0
+            node.self_samples += 1.0
+            return
         node = self.root
         node.add(metrics, leaf=not frames)
         for i, frame in enumerate(frames):
             node = node.child(frame)
             node.add(metrics, leaf=(i == len(frames) - 1))
+
+    def path_nodes(self, frames: Sequence[str]) -> list[CallNode]:
+        """Materialize (without bumping) the node chain for a root->leaf path.
+
+        Returns ``[root, node(frames[0]), ..., node(frames[-1])]``.  Callers
+        cache the chain keyed on the interned stack and replay it through
+        :meth:`add_stack_nodes`, turning repeated-sample ingestion into an
+        O(depth) float-add loop with zero hashing and zero allocation.
+        """
+        node = self.root
+        chain = [node]
+        for frame in frames:
+            node = node.child(frame)
+            chain.append(node)
+        return chain
+
+    @staticmethod
+    def add_stack_nodes(chain: Sequence[CallNode], count: float = 1.0) -> None:
+        """Bump one sample along a prebuilt chain (the ingestion fast lane)."""
+        for node in chain:
+            node.samples += count
+        chain[-1].self_samples += count
 
     def merge(self, other: "CallTree") -> "CallTree":
         """Merge another tree into this one (e.g. per-host trees at rendezvous)."""

@@ -42,6 +42,11 @@ from .calltree import SAMPLES, CallTree
 # Default matches the paper (§V-E): 0.5 s balances detail vs overhead.
 DEFAULT_PERIOD_S = 0.5
 
+# Ceiling on the thread backend's interned-ingest cache (one CallNode chain
+# per unique (thread, stack)); pathological stack diversity degrades to the
+# uncached path instead of growing target memory without bound.
+PATH_CACHE_CAP = 1 << 16
+
 # Environment seam used by the launcher's per-host daemons: when set, jobs
 # built through make_sampler publish to this spool for an external
 # `python -m repro.profilerd` to drain.
@@ -123,6 +128,9 @@ class SamplerConfig:
     # Daemon backend: spool file the agent publishes to (default: a temp path).
     spool_path: Optional[str] = None
     spool_bytes: int = 4 << 20
+    # Daemon backend: wire protocol the agent emits (2 = stack-interned
+    # STACKDEF/SAMPLE2 records, 1 = legacy per-frame SAMPLE records).
+    wire_version: int = 2
     # Daemon backend: where the daemon publishes status/tree/report files
     # (default: "<spool_path>.d").
     daemon_out: Optional[str] = None
@@ -201,6 +209,11 @@ class StackSampler:
     def __init__(self, config: Optional[SamplerConfig] = None):
         self.config = config or SamplerConfig()
         self.tree = CallTree()
+        # Interned-ingest cache mirroring the daemon's (profilerd.ingest):
+        # (thread_name, *stack) -> prebuilt CallNode chain.  A repeated stack
+        # costs one tuple hash plus an O(depth) float-add loop instead of
+        # per-frame dict bumps in add_stack.
+        self._path_cache: dict[tuple, list] = {}
         self.timeline: list[TimelinePoint] = []
         self.rusage: list[RusagePoint] = []
         self.n_samples = 0
@@ -237,7 +250,13 @@ class StackSampler:
                     continue
                 stack = self._stack_of(frame)
                 tname = names.get(ident, f"tid{ident}")
-                self.tree.add_stack([f"thread::{tname}"] + stack)
+                key = (tname, *stack)
+                chain = self._path_cache.get(key)
+                if chain is None:
+                    chain = self.tree.path_nodes([f"thread::{tname}"] + stack)
+                    if len(self._path_cache) < PATH_CACHE_CAP:
+                        self._path_cache[key] = chain
+                CallTree.add_stack_nodes(chain)
                 if self.config.record_timeline:
                     self.timeline.append(TimelinePoint(now, len(stack), tname))
             self.n_samples += 1

@@ -5,25 +5,36 @@ alongside the simulator, so the target pays only for raw frame capture and is
 never instrumented.  This package is that plane for JAX jobs:
 
 * :mod:`repro.profilerd.wire`     — self-delimiting binary codec for raw,
-  *unresolved* frame records (transport-agnostic: ring buffer or socket);
+  *unresolved* frame records (transport-agnostic: ring buffer or socket).
+  Wire v2 interns whole stacks: one ``STACKDEF`` per unique stack
+  (prefix-delta encoded), then fixed-size ``SAMPLE2`` references, so
+  steady-state bytes/sample are independent of stack depth;
 * :mod:`repro.profilerd.spool`    — single-writer/single-reader byte ring over
   an mmap'd file, the default transport (the agent never blocks: a full spool
-  drops whole batches and counts them);
+  drops whole batches and counts them; the reader drains in bounded chunks);
 * :mod:`repro.profilerd.agent`    — the only code that runs inside the target:
   snapshot ``sys._current_frames()`` each tick and append raw records;
 * :mod:`repro.profilerd.resolver` — interned-symbol cache turning raw frames
-  into ``origin::name`` symbols, identical to the in-process sampler's;
+  into ``origin::name`` symbols, identical to the in-process sampler's,
+  plus a per-``stack_id`` whole-stack memo for wire v2;
+* :mod:`repro.profilerd.ingest`   — cached-path call-tree ingestion: each
+  ``(thread, stack_id)`` resolves once, repeats are an O(depth) float-add
+  loop over the cached :class:`~repro.core.calltree.CallNode` chain;
 * :mod:`repro.profilerd.daemon`   — drains the spool, merges into a
   :class:`~repro.core.calltree.CallTree`, runs dominance/stall detection
   out-of-process, publishes live status and HTML/JSON reports;
 * ``python -m repro.profilerd``   — attach to a running job by spool path.
+
+``benchmarks/ingest_throughput.py`` measures the v1 -> v2 win (samples/sec
+and bytes/sample across depths and repeat ratios).
 """
 
 from .agent import Agent, DaemonBackend
 from .daemon import DaemonConfig, ProfilerDaemon
+from .ingest import TreeIngestor
 from .resolver import SymbolResolver
 from .spool import SpoolReader, SpoolWriter
-from .wire import Decoder, Encoder, RawFrame, RawSample
+from .wire import WIRE_VERSION, Decoder, Encoder, RawFrame, RawSample
 
 __all__ = [
     "Agent",
@@ -33,8 +44,10 @@ __all__ = [
     "SymbolResolver",
     "SpoolReader",
     "SpoolWriter",
+    "TreeIngestor",
     "Decoder",
     "Encoder",
     "RawFrame",
     "RawSample",
+    "WIRE_VERSION",
 ]

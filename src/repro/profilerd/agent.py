@@ -30,11 +30,17 @@ from repro.core.calltree import CallNode, CallTree
 from repro.core.sampler import SamplerConfig, is_profiler_thread, open_psutil_process
 
 from .spool import SpoolWriter
-from .wire import Encoder, RawFrame, RawSample, Rusage
+from .wire import WIRE_VERSION, Encoder, RawFrame, RawSample, Rusage
 
 
 class Agent:
-    """Raw-frame publisher: ``sys._current_frames()`` -> codec -> spool."""
+    """Raw-frame publisher: ``sys._current_frames()`` -> codec -> spool.
+
+    ``wire_version=2`` (the default) interns whole stacks: steady-state ticks
+    cost a fixed-size ``SAMPLE2`` record per thread instead of 12 bytes per
+    frame.  ``wire_version=1`` keeps the per-frame encoding for old
+    consumers; either way the daemon's decoder handles both.
+    """
 
     def __init__(
         self,
@@ -43,13 +49,14 @@ class Agent:
         max_depth: int = 256,
         spool_bytes: int = 4 << 20,
         record_rusage: bool = False,
+        wire_version: int = WIRE_VERSION,
     ):
         self.spool_path = spool_path
         self.period_s = period_s
         self.max_depth = max_depth
         self.record_rusage = record_rusage
         self._writer = SpoolWriter(spool_path, spool_bytes)
-        self._enc = Encoder()
+        self._enc = Encoder(version=wire_version)
         # Encoder + SpoolWriter are single-writer; sample_now() may race the
         # helper thread's own tick, so ticks are serialized.
         self._tick_lock = threading.Lock()
@@ -183,6 +190,7 @@ class DaemonBackend:
             max_depth=self.config.max_depth,
             spool_bytes=self.config.spool_bytes,
             record_rusage=self.config.record_rusage,
+            wire_version=self.config.wire_version,
         )
         self.agent.start()
         if self.spawn_daemon:

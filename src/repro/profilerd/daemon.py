@@ -33,6 +33,7 @@ from typing import Optional, Sequence
 from repro.core.calltree import CallTree
 from repro.core.detector import DominanceDetector, Rule
 
+from .ingest import TreeIngestor
 from .resolver import SymbolResolver
 from .spool import SpoolReader
 from .wire import Bye, Decoder, Hello, RawSample, Rusage
@@ -127,7 +128,10 @@ class ProfilerDaemon:
         self.reader: Optional[SpoolReader] = None
         self.decoder = Decoder()
         self.resolver = SymbolResolver(cfg.collapse_origins)
-        self.tree = CallTree()
+        # Cached-path ingestion: v2 samples resolve once per (thread, stack_id)
+        # and repeat as an O(depth) float-add loop (see profilerd.ingest).
+        self.ingestor = TreeIngestor(resolver=self.resolver)
+        self.tree = self.ingestor.tree
         self.detector = DominanceDetector(list(cfg.rules) if cfg.rules else [Rule()])
         self.detector.add_callback(self._on_anomaly)
         self.events: list[dict] = []
@@ -139,6 +143,7 @@ class ProfilerDaemon:
         self.windows: deque = deque(maxlen=cfg.window_ring)
         self.target_pid = 0
         self.period_s = 0.0
+        self.wire_version = 0  # from HELLO; 0 until the target announced
         self.n_stacks = 0
         self.dropped_batches = 0
         self.n_ticks_reported = 0  # from BYE
@@ -182,9 +187,8 @@ class ProfilerDaemon:
 
     def _apply(self, ev) -> None:
         if isinstance(ev, RawSample):
-            stack = self.resolver.resolve_stack(ev.frames)
-            self.tree.add_stack([f"thread::{ev.thread_name}"] + stack)
-            self.timeline.append((ev.t, len(stack)))
+            depth = self.ingestor.ingest(ev)
+            self.timeline.append((ev.t, depth))
             self.n_stacks += 1
             self._samples_since_publish += 1
             self._last_sample_wall = time.monotonic()
@@ -192,6 +196,7 @@ class ProfilerDaemon:
         elif isinstance(ev, Hello):
             self.target_pid = ev.pid
             self.period_s = ev.period_s
+            self.wire_version = ev.version
         elif isinstance(ev, Rusage):
             self.rusage.append((ev.t, ev.cpu_s, ev.rss_bytes))
         elif isinstance(ev, Bye):
@@ -203,6 +208,9 @@ class ProfilerDaemon:
         assert self.reader is not None, "attach() first"
         before = self.n_stacks
         while True:
+            # read() is capped (1 MiB/call by default), so a multi-minute
+            # backlog streams through this loop in bounded chunks instead of
+            # materializing as one giant bytes object.
             chunk = self.reader.read()
             if not chunk:
                 break
@@ -259,10 +267,17 @@ class ProfilerDaemon:
             "stalled": self._stalled,
             "done": self.bye_seen,
             "period_s": self.period_s,
+            "wire_version": self.wire_version,
             "n_stacks": self.n_stacks,
             "n_ticks": self.n_ticks_reported,
             "dropped_batches": self.dropped_batches,
             "resolver": {"hits": self.resolver.hits, "misses": self.resolver.misses},
+            "ingest": self.ingestor.stats(),
+            # Degraded-mode accounting for re-attaching mid-stream (a
+            # previous reader consumed the STRDEF/STACKDEF definitions):
+            # such samples ingest as "?" placeholder stacks, never silently.
+            "unknown_stack_refs": self.decoder.unknown_stack_refs,
+            "degraded_stackdefs": self.decoder.degraded_stackdefs,
             "hot_paths": [
                 {"path": list(p), "share": round(s, 4)}
                 for p, s in self.tree.hot_paths(k=self.cfg.hot_k)

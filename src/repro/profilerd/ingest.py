@@ -1,0 +1,84 @@
+"""Cached-path call-tree ingestion — the daemon half of wire-v2 stack interning.
+
+The agent interns stacks (one ``STACKDEF`` per unique stack, then fixed-size
+``SAMPLE2`` references); :class:`TreeIngestor` completes the contract on the
+daemon side: each ``(thread_name, stack_id)`` pair is resolved through the
+:class:`~repro.profilerd.resolver.SymbolResolver` exactly once, and the
+resulting :class:`~repro.core.calltree.CallNode` chain (root -> leaf, for
+inclusive bumps plus the leaf's self bump) is cached by direct reference.
+Ingesting a repeated sample is then an O(depth) float-add loop over the
+cached chain — zero hashing, zero allocation — via the node fast lane
+(:meth:`~repro.core.calltree.CallTree.add_stack_nodes`).
+
+v1 samples (no ``stack_id``) fall back to the per-frame resolve + generic
+``add_stack`` path, so old spools ingest unchanged.
+
+The cache never needs invalidation: the tree only grows, chains reference
+live accumulator nodes, and collapse settings are fixed per daemon run.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.calltree import CallNode, CallTree
+
+from .resolver import SymbolResolver
+from .wire import RawSample
+
+
+# Cache-entry ceiling: one chain per (thread, stack_id); the agent's own
+# stack table is capped (wire.DEFAULT_MAX_STACKS), this guards the daemon
+# against thread-name churn on top of that.  Overflow degrades to the
+# uncached path — correctness is unaffected.
+DEFAULT_MAX_PATHS = 1 << 18
+
+
+class TreeIngestor:
+    """Streams :class:`RawSample` events into a :class:`CallTree`."""
+
+    def __init__(
+        self,
+        tree: Optional[CallTree] = None,
+        resolver: Optional[SymbolResolver] = None,
+        collapse_origins: Sequence[str] = (),
+        max_paths: int = DEFAULT_MAX_PATHS,
+    ):
+        self.tree = tree if tree is not None else CallTree()
+        self.resolver = resolver if resolver is not None else SymbolResolver(collapse_origins)
+        self.max_paths = max_paths
+        # (thread_name, stack_id) -> (node chain incl. root + thread node,
+        # resolved stack depth for the timeline).
+        self._paths: dict[tuple[str, int], tuple[list[CallNode], int]] = {}
+        self.fast_hits = 0
+        self.slow_ingests = 0
+
+    def ingest(self, sample: RawSample) -> int:
+        """Merge one sample; returns the resolved stack depth (timeline)."""
+        sid = sample.stack_id
+        if sid is not None:
+            key = (sample.thread_name, sid)
+            cached = self._paths.get(key)
+            if cached is not None:
+                chain, depth = cached
+                CallTree.add_stack_nodes(chain)
+                self.fast_hits += 1
+                return depth
+            stack = self.resolver.resolve_stack_interned(sid, sample.frames)
+            chain = self.tree.path_nodes([f"thread::{sample.thread_name}"] + stack)
+            if len(self._paths) < self.max_paths:
+                self._paths[key] = (chain, len(stack))
+            CallTree.add_stack_nodes(chain)
+            self.slow_ingests += 1
+            return len(stack)
+        stack = self.resolver.resolve_stack(sample.frames)
+        self.tree.add_stack([f"thread::{sample.thread_name}"] + stack)
+        self.slow_ingests += 1
+        return len(stack)
+
+    def stats(self) -> dict:
+        return {
+            "fast_hits": self.fast_hits,
+            "slow_ingests": self.slow_ingests,
+            "cached_paths": len(self._paths),
+        }

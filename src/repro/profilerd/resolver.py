@@ -7,9 +7,16 @@ then applies the same ``collapse_origins`` folding
 is a tested invariant: the two backends must build identical trees from
 identical frames.
 
-The cache interns on the *(filename, func)* pair; classification runs once
-per unique pair and resolved symbol strings are shared between all stacks
-that reference them, so steady-state resolution is two dict hits per frame.
+Two cache tiers:
+
+* per-frame — interns on the *(filename, func)* pair; classification runs
+  once per unique pair and resolved symbol strings are shared between all
+  stacks that reference them, so v1 steady-state resolution is two dict hits
+  per frame;
+* per-stack (wire v2) — :meth:`SymbolResolver.resolve_stack_interned` memoizes
+  the whole collapsed stack on the agent-assigned ``stack_id``, so a stack
+  seen again (e.g. under a different thread name) resolves with a single
+  dict hit and no per-frame work at all.
 """
 
 from __future__ import annotations
@@ -26,6 +33,7 @@ class SymbolResolver:
     def __init__(self, collapse_origins: Sequence[str] = ()):
         self.collapse_origins = tuple(collapse_origins)
         self._cache: dict[tuple[str, str], str] = {}
+        self._stack_cache: dict[int, list[str]] = {}
         self.hits = 0
         self.misses = 0
 
@@ -44,3 +52,16 @@ class SymbolResolver:
         """Raw frames (root -> leaf) to collapsed symbol stack (root -> leaf)."""
         syms = [self.symbol(f.filename, f.func) for f in frames]
         return collapse_stack(syms, self.collapse_origins)
+
+    def resolve_stack_interned(self, stack_id: int, frames: Iterable[RawFrame]) -> list[str]:
+        """Like :meth:`resolve_stack`, memoized on the wire-v2 ``stack_id``.
+
+        Safe because stack ids are assigned transactionally by the agent and
+        never reused, so one id always names one ``(filename, func)`` frame
+        sequence — exactly the inputs resolution consumes.
+        """
+        stack = self._stack_cache.get(stack_id)
+        if stack is None:
+            stack = self.resolve_stack(frames)
+            self._stack_cache[stack_id] = stack
+        return stack

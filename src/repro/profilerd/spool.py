@@ -42,6 +42,11 @@ _OFF_WRITER_PID = 40
 _OFF_BYE = 48  # writer sets to 1 after its final record
 
 DEFAULT_CAPACITY = 4 << 20
+# Per-read() drain cap: a reader that fell minutes behind sees the backlog as
+# a stream of bounded chunks instead of one giant bytes object (the records
+# are self-delimiting, so a chunk boundary mid-record is fine — the streaming
+# decoder buffers the partial record).
+DEFAULT_READ_CAP = 1 << 20
 
 
 class SpoolError(RuntimeError):
@@ -180,7 +185,8 @@ class SpoolReader:
     def bye_seen(self) -> bool:
         return self._m.get_u64(_OFF_BYE) == 1
 
-    def read(self, max_bytes: Optional[int] = None) -> bytes:
+    def read(self, max_bytes: Optional[int] = DEFAULT_READ_CAP) -> bytes:
+        """Drain up to ``max_bytes`` (``None`` = everything available)."""
         head = self._m.get_u64(_OFF_HEAD)
         n = head - self._tail
         if max_bytes is not None:

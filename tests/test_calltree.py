@@ -124,6 +124,104 @@ class TestMergeDiff:
         assert t2.to_json() == t.to_json()
 
 
+class TestEdgeCases:
+    def test_levels_zero_folds_everything_into_root(self):
+        t = make_fig7_tree()
+        v = t.levels(0)
+        assert not v.root.children
+        assert v.total() == t.total() == 2
+        assert v.root.self_metrics == v.root.metrics  # all mass folded to root
+
+    def test_levels_zero_on_root_only_tree(self):
+        t = CallTree()
+        t.add_stack([])  # a zero-depth sample lands on the root itself
+        v = t.levels(0)
+        assert not v.root.children
+        assert v.total() == 1 and v.root.self_metrics["samples"] == 1
+
+    def test_levels_on_empty_tree(self):
+        t = CallTree()
+        for n in (0, 1, 3):
+            v = t.levels(n)
+            assert v.total() == 0 and not v.root.children
+
+    def test_diff_against_empty_snapshot_is_identity(self):
+        t = make_fig7_tree()
+        d = t.diff(CallTree())
+        assert d.to_json() == t.to_json()
+
+    def test_diff_of_empty_tree_is_root_only(self):
+        d = CallTree().diff(CallTree())
+        assert d.total() == 0 and not d.root.children
+        assert d.root.name == CallTree.ROOT
+
+    def test_diff_drops_metrics_that_cancel_to_exactly_zero(self):
+        """A metric that nets to 0.0 over the window disappears, and nodes
+        left with no metrics and no changed descendants are pruned."""
+        t = CallTree()
+        t.add_stack(["a", "b"], {"credit": 2.0})
+        snap = t.copy()
+        t.add_stack(["a", "b"], {"credit": -2.0})  # cancels within the window?
+        d = t.diff(snap)
+        # window delta is -2.0 (changed), so nodes survive with the delta...
+        assert d.root.children["a"].metrics["credit"] == -2.0
+        # ...but diffing a tree against itself cancels everything to 0.0
+        self_diff = t.diff(t.copy())
+        assert self_diff.total() == 0 and not self_diff.root.children
+
+    def test_diff_unchanged_subtree_pruned_even_with_zero_valued_metric(self):
+        t = CallTree()
+        t.add_stack(["a", "b"], {"samples": 0.0})  # explicitly zero-valued
+        d = t.diff(CallTree())
+        assert not d.root.children  # 0.0 deltas never materialize nodes
+
+
+class TestFastLane:
+    """The samples/self_samples hot counters must be invisible to readers."""
+
+    def test_fast_lane_flushes_into_metrics_on_read(self):
+        t = CallTree()
+        t.add_stack(["a", "b"])  # default-metrics path rides the fast lane
+        a = t.root.children["a"]
+        assert a.samples == 1.0  # pending, not yet in the dict
+        assert a.metrics["samples"] == 1.0  # reading flushes
+        assert a.samples == 0.0
+
+    def test_path_nodes_plus_add_stack_nodes_equals_add_stack(self):
+        stacks = [["a", "b", "c"], ["a", "b"], ["a", "x"], ["a", "b", "c"]]
+        generic, fast = CallTree(), CallTree()
+        cache = {}
+        for s in stacks:
+            generic.add_stack(s)
+            key = tuple(s)
+            chain = cache.get(key)
+            if chain is None:
+                chain = cache[key] = fast.path_nodes(s)
+            CallTree.add_stack_nodes(chain)
+        assert fast.to_json() == generic.to_json()
+
+    def test_fast_lane_mixes_with_generic_metrics(self):
+        t = CallTree()
+        t.add_stack(["a"], {"samples": 2.0, "flops": 5.0})  # generic dict path
+        t.add_stack(["a"])  # fast lane
+        a = t.root.children["a"]
+        assert a.metrics == {"samples": 3.0, "flops": 5.0}
+        assert a.self_metrics["samples"] == 3.0
+
+    def test_views_and_merge_see_flushed_counts(self):
+        t = CallTree()
+        chain = t.path_nodes(["a", "b"])
+        for _ in range(5):
+            CallTree.add_stack_nodes(chain)
+        assert t.flatten()["b"] == 5
+        assert t.copy().total() == 5
+        other = CallTree()
+        other.add_stack(["a", "b"])
+        t.merge(other)
+        assert t.root.children["a"].children["b"].metrics["samples"] == 6
+        assert t.levels(1).root.children["a"].self_metrics["samples"] == 6
+
+
 # ---------------------------------------------------------------------------
 # Property-based invariants
 # ---------------------------------------------------------------------------

@@ -24,12 +24,28 @@ import time
 
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # keep property tests running where hypothesis is absent
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
 from repro.core import CallTree, SamplerConfig, StackSampler, collapse_stack, frame_symbol, make_sampler
 from repro.profilerd.agent import Agent, DaemonBackend
 from repro.profilerd.daemon import STALLED, DaemonConfig, ProfilerDaemon
+from repro.profilerd.ingest import TreeIngestor
 from repro.profilerd.resolver import SymbolResolver
 from repro.profilerd.spool import SpoolReader, SpoolWriter
-from repro.profilerd.wire import Bye, Decoder, Encoder, Hello, RawFrame, RawSample
+from repro.profilerd.wire import (
+    WIRE_VERSION,
+    Bye,
+    Decoder,
+    Encoder,
+    Hello,
+    RawFrame,
+    RawSample,
+)
 
 SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -140,6 +156,344 @@ class TestWireCodec:
         got = SymbolResolver(("py",)).resolve_stack(raw)
         assert got == expected
         assert "py::*" in got
+
+
+class TestWireV2:
+    """Stack interning (STACKDEF/SAMPLE2): the perf core of wire v2."""
+
+    def frames(self, leaf="leaf_fn"):
+        return [
+            RawFrame("/usr/lib/python3/threading.py", "run", 10),
+            RawFrame("/site-packages/jax/api.py", "jit", 20),
+            RawFrame("/root/repo/src/repro/models/model.py", leaf, 30),
+        ]
+
+    def test_steady_state_sample_is_fixed_size(self):
+        enc, dec = Encoder(), Decoder()
+        p1, fresh1 = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        p2, fresh2 = enc.encode_tick([RawSample(0.1, 1, "t", self.frames())])
+        assert fresh2 == []  # no new strings *and* no new stacks
+        # SAMPLE2 record: 5-byte framing + 24-byte payload.
+        assert len(p2) == 29
+        evs = list(dec.feed(p1 + p2))
+        assert [e.frames for e in evs] == [self.frames(), self.frames()]
+        assert evs[0].stack_id == evs[1].stack_id == 0
+        # the decoder shares one frames list per interned stack (fast lane)
+        assert evs[0].frames is evs[1].frames
+
+    def test_prefix_delta_against_previous_stackdef(self):
+        """Two stacks sharing a root prefix: the second STACKDEF encodes only
+        the divergent tail (prefix-delta), and both decode to full stacks."""
+        enc, dec = Encoder(), Decoder()
+        a = self.frames("leaf_a")
+        b = self.frames("leaf_b")  # same first two frames, new leaf
+        pa, _ = enc.encode_tick([RawSample(0.0, 1, "t", a)])
+        pb, _ = enc.encode_tick([RawSample(0.1, 1, "t", b)])
+        # delta STACKDEF: only the leaf frame + its one new string crosses
+        assert len(pb) < len(pa) / 2
+        evs = list(dec.feed(pa + pb))
+        assert evs[0].frames == a and evs[1].frames == b
+        assert evs[0].stack_id != evs[1].stack_id
+
+    def test_stackdef_rollback_keeps_stream_decodable(self):
+        """A dropped batch with a fresh STACKDEF must not poison later ticks:
+        ids are never reused and the delta context resets."""
+        enc, dec = Encoder(), Decoder()
+        committed, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames("leaf_a"))])
+        dropped, fresh = enc.encode_tick([RawSample(0.1, 1, "t", self.frames("leaf_b"))])
+        enc.rollback(fresh)  # transport rejected; decoder never sees `dropped`
+        retry, _ = enc.encode_tick([RawSample(0.2, 1, "t", self.frames("leaf_b"))])
+        evs = list(dec.feed(committed + retry))
+        assert [e.frames for e in evs] == [self.frames("leaf_a"), self.frames("leaf_b")]
+        assert len({e.stack_id for e in evs}) == 2
+
+    def test_hello_announces_negotiated_version(self):
+        for version in (1, 2):
+            (hello,) = Decoder().feed(Encoder(version=version).encode_hello(1, 0.5))
+            assert isinstance(hello, Hello) and hello.version == version
+        assert WIRE_VERSION == 2
+
+    def test_v1_encoder_still_produces_v1_stream(self):
+        """Backward compat: Encoder(version=1) emits per-frame SAMPLE records
+        (stack_id is None) and old spools keep decoding."""
+        enc, dec = Encoder(version=1), Decoder()
+        p, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        (ev,) = list(dec.feed(p))
+        assert ev.frames == self.frames() and ev.stack_id is None
+
+    def test_utf8_truncation_lands_on_codepoint_boundary(self):
+        """A >64 KiB multi-byte name truncates on a codepoint boundary, never
+        leaving a mangled trailing sequence (the old byte-slice bug)."""
+        enc, dec = Encoder(), Decoder()
+        long_name = "é" * 40_000  # 80,000 UTF-8 bytes > 0xFFFF
+        p, _ = enc.encode_tick([RawSample(0.0, 1, "t", [RawFrame("/f.py", long_name, 1)])])
+        (ev,) = list(dec.feed(p))
+        got = ev.frames[0].func
+        assert "�" not in got  # no replacement char from a split sequence
+        assert got == "é" * (0xFFFF // 2)
+
+    def test_same_stack_different_threads_shares_stackdef(self):
+        enc, dec = Encoder(), Decoder()
+        p, _ = enc.encode_tick(
+            [RawSample(0.0, 1, "a", self.frames()), RawSample(0.0, 2, "b", self.frames())]
+        )
+        evs = list(dec.feed(p))
+        assert evs[0].stack_id == evs[1].stack_id
+        assert {e.thread_name for e in evs} == {"a", "b"}
+
+    def test_leaf_lineno_jitter_does_not_defeat_interning(self):
+        """An actively-executing leaf frame changes f_lineno nearly every
+        tick; resolution is line-agnostic, so those must intern as ONE stack
+        (else a busy thread would mint a STACKDEF per sample and grow the
+        intern tables without bound)."""
+        enc, dec = Encoder(), Decoder()
+        first, _ = enc.encode_tick(
+            [RawSample(0.0, 1, "t", self.frames()[:-1] + [RawFrame("/w.py", "busy", 100)])]
+        )
+        for i in range(1, 6):
+            jittered = self.frames()[:-1] + [RawFrame("/w.py", "busy", 100 + i)]
+            p, fresh = enc.encode_tick([RawSample(i * 0.1, 1, "t", jittered)])
+            assert fresh == []  # no new STACKDEF despite the moving lineno
+            assert len(p) == 29  # steady-state fixed-size SAMPLE2
+            first += p
+        evs = list(dec.feed(first))
+        assert len({e.stack_id for e in evs}) == 1
+        # decoded linenos are the first occurrence's representative values
+        assert all(e.frames[-1].lineno == 100 for e in evs)
+
+    def test_unknown_stack_id_degrades_to_counted_placeholder(self):
+        """Re-attaching after a previous reader consumed the STACKDEFs must
+        not silently drop stack structure: samples decode to a "?" frame
+        (v1-style degradation) and the loss is counted."""
+        enc = Encoder()
+        p1, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        p2, _ = enc.encode_tick([RawSample(0.1, 1, "t", self.frames())])
+        dec = Decoder()  # fresh decoder: never saw p1's STRDEF/STACKDEF
+        (ev,) = list(dec.feed(p2))
+        assert ev.frames == [RawFrame("?", "?", 0)]
+        assert ev.thread_name == "?"  # name STRDEF was consumed too
+        assert dec.unknown_stack_refs == 1
+        ing = TreeIngestor()
+        ing.ingest(ev)
+        assert ing.tree.total() == 1  # counted, visible as thread::?/py::?
+
+    def test_delta_stackdef_against_unseen_context_degrades_not_misroots(self):
+        """A mid-stream attach may first see a STACKDEF that delta-encodes
+        against a definition the dead reader consumed.  Applying it would
+        silently mis-root the stack; it must degrade to the counted
+        placeholder, and stay degraded until a full (n_prefix=0) definition
+        restores the context."""
+        enc = Encoder()
+        p1, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames("leaf_a"))])
+        p2, _ = enc.encode_tick([RawSample(0.1, 1, "t", self.frames("leaf_b"))])
+        # leaf_b's STACKDEF shares a 2-frame prefix with leaf_a's -> delta
+        dec = Decoder()
+        evs = list(dec.feed(p2))  # p1 was consumed by a previous reader
+        assert dec.degraded_stackdefs == 1
+        assert [e.frames for e in evs] == [[RawFrame("?", "?", 0)]]
+        # every sample referencing the degraded def is counted, not just the def
+        assert dec.unknown_stack_refs == 1
+        # a later definition with a fresh root (n_prefix=0) recovers fully
+        fresh_stack = [RawFrame("/other/root.py", "main", 1), RawFrame("/w.py", "busy", 2)]
+        p3, _ = enc.encode_tick([RawSample(0.2, 1, "t", fresh_stack)])
+        (ev3,) = list(dec.feed(p3))
+        assert [(f.filename, f.func) for f in ev3.frames] == [
+            ("/other/root.py", "main"), ("/w.py", "busy")
+        ]
+        assert dec.degraded_stackdefs == 1  # no further degradation
+
+    def test_stack_table_cap_falls_back_to_v1_records(self):
+        """A full stack-intern table must not grow target memory: new stacks
+        encode as v1 per-frame SAMPLE records in the same stream."""
+        enc, dec = Encoder(max_stacks=1), Decoder()
+        interned = self.frames("leaf_a")
+        overflow = [RawFrame("/x.py", "other_root", 1)]
+        p, _ = enc.encode_tick(
+            [RawSample(0.0, 1, "t", interned), RawSample(0.0, 2, "t", overflow)]
+        )
+        evs = list(dec.feed(p))
+        assert evs[0].stack_id == 0 and evs[0].frames == interned
+        assert evs[1].stack_id is None and evs[1].frames == overflow  # v1 fallback
+        # the interned stack keeps its fixed-size fast path
+        p2, fresh = enc.encode_tick([RawSample(0.1, 1, "t", interned)])
+        assert fresh == [] and len(p2) == 29
+
+    def test_keyframe_defs_bound_degraded_window_after_reattach(self):
+        """Real stacks always share root frames, so organic n_prefix=0 defs
+        never happen after warm-up; periodic keyframe definitions must bound
+        how long a mid-stream attacher stays degraded."""
+        from repro.profilerd.wire import FULL_DEF_INTERVAL
+
+        enc = Encoder()
+        base = self.frames()[:-1]
+        consumed, _ = enc.encode_tick([RawSample(0.0, 1, "t", base + [RawFrame("/w.py", "f0", 1)])])
+        dec = Decoder()  # attaches after `consumed` is gone
+        recovered_at = None
+        for i in range(1, FULL_DEF_INTERVAL + 2):
+            stack = base + [RawFrame("/w.py", f"f{i}", 1)]  # shares the root prefix
+            p, _ = enc.encode_tick([RawSample(i * 0.1, 1, "t", stack)])
+            (ev,) = list(dec.feed(p))
+            if ev.frames != [RawFrame("?", "?", 0)]:
+                recovered_at = i
+                break
+        assert recovered_at is not None and recovered_at <= FULL_DEF_INTERVAL
+        assert dec.degraded_stackdefs == recovered_at - 1
+        # Once recovered, subsequent deltas decode with full structure again.
+        # Strings defined before the attach stay "?" (v1-parity degradation);
+        # strings defined after decode normally.
+        p, _ = enc.encode_tick([RawSample(9.9, 1, "t", base + [RawFrame("/w.py", "tail", 2)])])
+        (ev,) = list(dec.feed(p))
+        assert [f.func for f in ev.frames] == ["?"] * len(base) + ["tail"]
+
+    def test_corrupt_record_raises_instead_of_desyncing(self):
+        """A declared frame count exceeding the record's length prefix must
+        raise loudly, never silently read the next record's bytes."""
+        import struct
+
+        enc = Encoder(version=1)
+        good, _ = enc.encode_tick([RawSample(0.0, 1, "t", self.frames())])
+        # Find the SAMPLE record and inflate its nframes field without
+        # growing the payload: length prefix u32, kind u8, then the header
+        # <dQIH> whose final u16 is nframes.
+        buf = bytearray(good)
+        off = 0
+        while True:
+            (n,) = struct.unpack_from("<I", buf, off)
+            kind = buf[off + 4]
+            if kind == 3:  # K_SAMPLE
+                hdr_off = off + 5
+                struct.pack_into("<H", buf, hdr_off + 8 + 8 + 4, 999)
+                break
+            off += 4 + n
+        with pytest.raises(ValueError):
+            list(Decoder().feed(bytes(buf)))
+
+
+_WIRE_FILES = ["/a/repro/x.py", "/b/jax/y.py", "/c/numpy/z.py", "/d/app.py"]
+_WIRE_FUNCS = ["fa", "fb", "fc", "fd", "fe"]
+_frame_st = st.sampled_from(
+    [RawFrame(f, q, ln) for f in _WIRE_FILES for q in _WIRE_FUNCS for ln in (1, 7)]
+)
+_stack_st = st.lists(_frame_st, min_size=0, max_size=8)
+_stacks_st = st.lists(_stack_st, min_size=1, max_size=24)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_stacks_st)
+def test_prop_v1_v2_decode_parity(stacks):
+    """The same samples encoded with v1 and v2 decode to the same symbol
+    sequences and build identical trees through the ingestor.
+
+    v1 round-trips frames exactly; v2 interns stacks on the (filename, func)
+    sequence, so decoded linenos are the first occurrence's — everything
+    symbol resolution consumes is preserved bit-for-bit.
+    """
+    samples = [RawSample(i * 0.1, 100 + (i % 3), f"w{i % 3}", s) for i, s in enumerate(stacks)]
+    trees = {}
+    for version in (1, 2):
+        enc, dec = Encoder(version=version), Decoder()
+        payload = b"".join(enc.encode_tick(samples[i : i + 4])[0] for i in range(0, len(samples), 4))
+        ing = TreeIngestor()
+        decoded = []
+        for ev in dec.feed(payload):
+            decoded.append(ev.frames)
+            ing.ingest(ev)
+        if version == 1:
+            assert decoded == [s.frames for s in samples]
+        assert [[(f.filename, f.func) for f in fs] for fs in decoded] == [
+            [(f.filename, f.func) for f in s.frames] for s in samples
+        ]
+        trees[version] = ing.tree
+    assert trees[1].to_json() == trees[2].to_json()
+
+
+@settings(max_examples=40, deadline=None)
+@given(_stacks_st)
+def test_prop_v2_steady_state_bytes_are_depth_independent(stacks):
+    """Once stacks are interned, a repeated tick costs exactly 29 bytes per
+    v2 sample regardless of depth, while v1 re-pays 12 bytes per frame."""
+    samples = [RawSample(i * 0.1, 7, "w", s) for i, s in enumerate(stacks)]
+    steady = {}
+    for version in (1, 2):
+        enc = Encoder(version=version)
+        enc.encode_tick(samples)  # warm the intern tables
+        steady[version], fresh = enc.encode_tick(samples)
+        assert fresh == []
+    assert len(steady[1]) == sum(27 + 12 * len(s.frames) for s in samples)
+    assert len(steady[2]) == 29 * len(samples)
+
+
+class TestIngestFastPath:
+    def _mixed_samples(self):
+        stack_a = [RawFrame("/d/app.py", "main", 1), RawFrame("/a/repro/x.py", "step", 2)]
+        stack_b = [RawFrame("/d/app.py", "main", 1), RawFrame("/b/jax/y.py", "jit", 3)]
+        return [
+            RawSample(0.0, 1, "w", stack_a),
+            RawSample(0.1, 1, "w", stack_a),
+            RawSample(0.2, 1, "w", stack_b),
+            RawSample(0.3, 1, "w", stack_a),
+        ]
+
+    def test_repeated_samples_hit_cached_chain(self):
+        enc, dec, ing = Encoder(), Decoder(), TreeIngestor()
+        for s in self._mixed_samples():
+            payload, _ = enc.encode_tick([s])
+            for ev in dec.feed(payload):
+                ing.ingest(ev)
+        assert ing.fast_hits == 2  # both stack_a repeats
+        assert ing.slow_ingests == 2  # first sight of stack_a and stack_b
+        assert ing.tree.total() == 4
+        flat = ing.tree.flatten()
+        assert flat["repro::step"] == 3 and flat["jax::jit"] == 1
+
+    def test_fast_path_tree_equals_generic_add_stack(self):
+        """Cached-chain ingestion and the generic per-frame path must agree."""
+        enc, dec, ing = Encoder(), Decoder(), TreeIngestor()
+        reference = CallTree()
+        ref_resolver = SymbolResolver()
+        for s in self._mixed_samples():
+            reference.add_stack([f"thread::{s.thread_name}"] + ref_resolver.resolve_stack(s.frames))
+            payload, _ = enc.encode_tick([s])
+            for ev in dec.feed(payload):
+                ing.ingest(ev)
+        assert ing.tree.to_json() == reference.to_json()
+
+    def test_daemon_reports_v2_and_fast_hits(self, tmp_path, parked):
+        spool = str(tmp_path / "t.spool")
+        agent = Agent(spool, period_s=10)
+        for _ in range(20):
+            agent.tick()
+        agent.stop()
+        daemon = ProfilerDaemon(
+            DaemonConfig(spool_path=spool, out_dir=str(tmp_path / "out"), max_seconds=10)
+        )
+        daemon.run()
+        status = daemon.status()
+        assert status["wire_version"] == 2
+        # The parked worker repeats the same stack: the fast lane dominates.
+        assert status["ingest"]["fast_hits"] > status["ingest"]["slow_ingests"]
+        assert status["ingest"]["cached_paths"] >= 1
+
+    def test_v1_agent_spool_still_ingests(self, tmp_path, parked):
+        """Old spools (v1 agents) decode and build the same tree as v2."""
+        trees = {}
+        for version in (1, 2):
+            spool = str(tmp_path / f"v{version}.spool")
+            agent = Agent(spool, period_s=10, wire_version=version)
+            for _ in range(8):
+                agent.tick()
+            agent.stop()
+            daemon = ProfilerDaemon(
+                DaemonConfig(
+                    spool_path=spool, out_dir=str(tmp_path / f"out{version}"), max_seconds=10
+                )
+            )
+            daemon.run()
+            assert daemon.wire_version == version
+            sub = daemon.tree.root.children.get("thread::parked-worker")
+            assert sub is not None
+            trees[version] = json.dumps(sub.to_dict())
+        assert trees[1] == trees[2]
 
 
 class TestSpool:
