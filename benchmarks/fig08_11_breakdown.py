@@ -10,7 +10,6 @@ expert dispatch where dense archs are dominated by attention+mlp."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import tree_from_compiled

@@ -8,7 +8,6 @@ emergency checkpoint lands."""
 
 from __future__ import annotations
 
-import os
 import tempfile
 import threading
 import time

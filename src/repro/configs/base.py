@@ -7,7 +7,7 @@ ever lowered via the dry-run (ShapeDtypeStruct stand-ins, no allocation).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 # ---------------------------------------------------------------------------

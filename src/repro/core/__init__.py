@@ -19,7 +19,19 @@ _EXPORTS = {
     "DominanceDetector": ".detector",
     "Rule": ".detector",
     "StragglerDetector": ".detector",
+    "TrendDetector": ".detector",
+    "TrendRule": ".detector",
+    "TrendVerdict": ".detector",
     "WatchdogLoop": ".detector",
+    "segment_phases": ".detector",
+    "CountSealer": ".snapshot",
+    "EpochMeta": ".snapshot",
+    "EpochSealer": ".snapshot",
+    "SnapshotError": ".snapshot",
+    "TimelineReader": ".snapshot",
+    "TimelineWriter": ".snapshot",
+    "load_snapshot": ".snapshot",
+    "save_snapshot": ".snapshot",
     "DEFAULT_PERIOD_S": ".sampler",
     "SamplerBackend": ".sampler",
     "SamplerConfig": ".sampler",
@@ -30,8 +42,12 @@ _EXPORTS = {
     "make_sampler": ".sampler",
     "ViewConfig": ".report",
     "breakdown": ".report",
+    "diff_rows": ".report",
+    "name_shares": ".report",
+    "render_diff": ".report",
     "render_html": ".report",
     "save_views": ".report",
+    "share_regressions": ".report",
     "write_report": ".report",
     # device plane (imports jax on first access)
     "BlockwiseEngine": ".engines",

@@ -405,6 +405,10 @@ class CallTree:
     def depth(self) -> int:
         return self.root.depth() - 1
 
+    def node_count(self) -> int:
+        """Distinct call-sites in the tree (excluding the synthetic root)."""
+        return sum(1 for _ in self.root.walk()) - 1
+
     # -- serialization ------------------------------------------------------------
 
     def to_json(self, **kw) -> str:

@@ -25,8 +25,9 @@ warn+checkpoint flow while integrating with the launcher's restart policy.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Callable, Mapping, Optional, Sequence
 
 from .calltree import SAMPLES, CallTree
 
@@ -107,6 +108,190 @@ class DominanceDetector:
                 for cb in self.callbacks:
                     cb(ev)
         return fired
+
+
+LIVELOCK = "LIVELOCK"
+DOMINANT = "DOMINANT"
+SHARE_DRIFT = "SHARE_DRIFT"
+
+
+def share_distance(a: Mapping[str, float], b: Mapping[str, float]) -> float:
+    """Total-variation distance between two (already normalized) share vectors."""
+    keys = set(a) | set(b)
+    return 0.5 * sum(abs(a.get(k, 0.0) - b.get(k, 0.0)) for k in keys)
+
+
+def flat_shares(tree: CallTree, metric: str = SAMPLES) -> dict[str, float]:
+    """Flattened per-name share vector (sums over call-sites, normalized)."""
+    from .report import name_shares  # lazy: report imports from this module too
+
+    return name_shares(tree, metric, self_only=False)
+
+
+def segment_phases(vectors: Sequence[Mapping[str, float]], boundary: float = 0.25) -> list[tuple[int, int]]:
+    """Segment an epoch sequence into phases (paper: "pinpoint when it occurs").
+
+    Consecutive epochs whose share vectors stay within ``boundary`` TV
+    distance belong to one phase; a jump starts a new one.  Returns inclusive
+    ``(start_epoch_index, end_epoch_index)`` pairs over the input sequence.
+    """
+    if not vectors:
+        return []
+    phases: list[tuple[int, int]] = []
+    start = 0
+    for i in range(1, len(vectors)):
+        if share_distance(vectors[i], vectors[i - 1]) > boundary:
+            phases.append((start, i - 1))
+            start = i
+    phases.append((start, len(vectors) - 1))
+    return phases
+
+
+@dataclass
+class TrendRule:
+    """Epoch-trend thresholds for :class:`TrendDetector`.
+
+    The paper's dominance threshold alone cannot tell a livelock from a
+    legitimately hot steady-state loop; the disambiguator is *progress*: a
+    livelocked target repeats the identical actions, so its progress counter
+    (by default the number of distinct call-sites ever sealed — a spinning
+    target mints no new stacks) stops growing while the dominance holds.
+    """
+
+    threshold: float = 0.90  # dominance share (the paper's default)
+    epochs: int = 3  # sustained dominant+stalled epochs before LIVELOCK
+    progress_epsilon: float = 0.0  # growth <= eps counts as "no progress"
+    drift_threshold: float = 0.35  # TV distance vs the trailing baseline
+    baseline_window: int = 8  # trailing epochs forming the drift baseline
+    min_baseline_epochs: int = 3
+    metric: str = SAMPLES
+    self_only: bool = True
+    min_epoch_total: float = 4.0  # ignore nearly-empty epochs
+
+
+@dataclass
+class TrendVerdict:
+    """One epoch-trend finding, stamped with the epoch where it began."""
+
+    kind: str  # LIVELOCK | DOMINANT | SHARE_DRIFT
+    path: tuple[str, ...]
+    share: float  # dominant share, or TV distance for SHARE_DRIFT
+    epoch: int
+    began_epoch: int
+    wall_time: float = field(default_factory=time.time)
+
+    def describe(self) -> str:
+        what = "/".join(self.path) if self.path else "<distribution>"
+        return (
+            f"[{self.kind}] {what} share={self.share:.1%} at epoch {self.epoch} "
+            f"(began epoch {self.began_epoch})"
+        )
+
+
+class TrendDetector:
+    """Trend analysis over sealed epoch windows (timeline-aware detection).
+
+    Consumes one *window* tree (the epoch's activity delta, not the
+    cumulative tree) plus a progress counter per epoch and reports:
+
+    * ``DOMINANT``   — one call-site holds >= ``threshold`` of the window
+      while progress still grows (a hot loop, not an anomaly by itself);
+    * ``LIVELOCK``   — the same dominance **with zero progress growth** for
+      ``epochs`` consecutive epochs, stamped with the epoch where the
+      stalled-dominance run began;
+    * ``SHARE_DRIFT``— the window's share distribution moved more than
+      ``drift_threshold`` (TV distance) away from the trailing
+      ``baseline_window``-epoch mean, stamped with the first drifting epoch.
+
+    Each distinct ``(kind, path, began_epoch)`` is reported once.
+    """
+
+    def __init__(self, rule: Optional[TrendRule] = None):
+        self.rule = rule if rule is not None else TrendRule()
+        self.events: list[TrendVerdict] = []
+        self._epoch = -1
+        self._last_progress: Optional[float] = None
+        self._dom_path: Optional[tuple[str, ...]] = None
+        self._dom_began = 0
+        self._stall_began: Optional[int] = None
+        self._drift_began: Optional[int] = None
+        self._baseline: deque = deque(maxlen=max(1, self.rule.baseline_window))
+        self._emitted: set[tuple[str, tuple[str, ...], int]] = set()
+
+    def _emit(self, out: list[TrendVerdict], kind: str, path: tuple[str, ...], share: float, began: int, wall_time: float) -> None:
+        key = (kind, path, began)
+        if key in self._emitted:
+            return
+        self._emitted.add(key)
+        v = TrendVerdict(kind, path, share, self._epoch, began, wall_time)
+        self.events.append(v)
+        out.append(v)
+
+    def observe_epoch(
+        self,
+        window: CallTree,
+        progress: float = 0.0,
+        epoch: Optional[int] = None,
+        wall_time: Optional[float] = None,
+    ) -> list[TrendVerdict]:
+        rule = self.rule
+        self._epoch = epoch if epoch is not None else self._epoch + 1
+        wall = wall_time if wall_time is not None else time.time()
+        out: list[TrendVerdict] = []
+
+        # Progress stall tracking runs every epoch so a stall that predates
+        # the dominance onset is stamped where it actually began.
+        if self._last_progress is None or progress - self._last_progress > rule.progress_epsilon:
+            self._stall_began = None
+        elif self._stall_began is None:
+            self._stall_began = self._epoch
+        self._last_progress = progress
+
+        total = window.total(rule.metric)
+        if total < rule.min_epoch_total:
+            self._dom_path = None
+            return out
+
+        # -- dominance / livelock -------------------------------------------
+        shares = window.shares(rule.metric, self_only=rule.self_only)
+        top: Optional[tuple[tuple[str, ...], float]] = None
+        for path, share in shares.items():
+            if share >= rule.threshold and (top is None or share > top[1]):
+                top = (path, share)
+        if top is None:
+            self._dom_path = None
+        else:
+            path, share = top
+            if self._dom_path != path:
+                self._dom_path = path
+                self._dom_began = self._epoch
+            if self._stall_began is not None:
+                began = max(self._dom_began, self._stall_began)
+                if self._epoch - began + 1 >= rule.epochs:
+                    self._emit(out, LIVELOCK, path, share, began, wall)
+                else:
+                    self._emit(out, DOMINANT, path, share, self._dom_began, wall)
+            else:
+                self._emit(out, DOMINANT, path, share, self._dom_began, wall)
+
+        # -- distribution drift vs trailing baseline ------------------------
+        cur = flat_shares(window, rule.metric)
+        if len(self._baseline) >= rule.min_baseline_epochs:
+            base: dict[str, float] = {}
+            for vec in self._baseline:
+                for k, v in vec.items():
+                    base[k] = base.get(k, 0.0) + v
+            n = len(self._baseline)
+            base = {k: v / n for k, v in base.items()}
+            tv = share_distance(cur, base)
+            if tv >= rule.drift_threshold:
+                if self._drift_began is None:
+                    self._drift_began = self._epoch
+                self._emit(out, SHARE_DRIFT, (), tv, self._drift_began, wall)
+            else:
+                self._drift_began = None
+        self._baseline.append(cur)
+        return out
 
 
 class StragglerDetector:

@@ -26,7 +26,6 @@ shapes, so every metric here is **per device** — consistent with
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Optional

@@ -13,7 +13,7 @@ from __future__ import annotations
 import html
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from .calltree import SAMPLES, CallNode, CallTree
@@ -85,6 +85,112 @@ def write_report(tree: CallTree, out_dir: str, name: str, metric: str = SAMPLES)
     with open(paths["json"], "w") as f:
         f.write(tree.to_json(indent=1))
     return paths
+
+
+# -- cross-run differential analysis ----------------------------------------
+
+
+def name_shares(tree: CallTree, metric: str = SAMPLES, self_only: bool = True) -> dict[str, float]:
+    """Per-function-name share vector, normalized to sum to 1.
+
+    ``self_only=True`` (default for regression checks) attributes each sample
+    to the function it *ended* in, which is the sharp signal: an injected hot
+    loop shows up as its own self-share, not smeared over its whole ancestry.
+    """
+    out: dict[str, float] = {}
+    for _path, node in tree.root.walk():
+        if node is tree.root:
+            continue
+        src = node.self_metrics if self_only else node.metrics
+        v = src.get(metric, 0.0)
+        if v:
+            out[node.name] = out.get(node.name, 0.0) + v
+    total = sum(out.values())
+    if total <= 0:
+        return {}
+    return {k: v / total for k, v in out.items()}
+
+
+def diff_rows(
+    a: CallTree,
+    b: CallTree,
+    metric: str = SAMPLES,
+    self_only: bool = False,
+) -> list[tuple[tuple[str, ...], float, float, float]]:
+    """Per-call-site share deltas between two trees (the cross-run diff).
+
+    Returns ``(path, share_a, share_b, share_b - share_a)`` over the union of
+    call-site paths, sorted by descending ``|delta|`` — "did this change make
+    the hot path slower" answered per node.
+    """
+    sa = a.shares(metric, self_only=self_only)
+    sb = b.shares(metric, self_only=self_only)
+    rows = []
+    for path in set(sa) | set(sb):
+        va, vb = sa.get(path, 0.0), sb.get(path, 0.0)
+        rows.append((path, va, vb, vb - va))
+    rows.sort(key=lambda r: (-abs(r[3]), r[0]))
+    return rows
+
+
+def render_diff(
+    a: CallTree,
+    b: CallTree,
+    metric: str = SAMPLES,
+    *,
+    label_a: str = "a",
+    label_b: str = "b",
+    min_delta: float = 0.002,
+    max_rows: int = 40,
+    self_only: bool = False,
+) -> str:
+    """Text rendering of a cross-run tree diff (per-node share deltas)."""
+    from .detector import share_distance
+
+    rows = diff_rows(a, b, metric, self_only=self_only)
+    dist = share_distance(name_shares(a, metric), name_shares(b, metric))
+    lines = [
+        f"# diff metric={metric} {label_a}: total={a.total(metric):.6g} "
+        f"{label_b}: total={b.total(metric):.6g} share_distance={dist:.4f}",
+        f"{'delta':>8}  {label_a:>7}  {label_b:>7}  path",
+    ]
+    shown = 0
+    for path, va, vb, d in rows:
+        if abs(d) < min_delta:
+            continue
+        lines.append(f"{d:+8.2%}  {va:7.2%}  {vb:7.2%}  {'/'.join(path)}")
+        shown += 1
+        if shown >= max_rows:
+            lines.append(f"# ... {sum(1 for r in rows if abs(r[3]) >= min_delta) - shown} more rows")
+            break
+    if shown == 0:
+        lines.append("# trees are share-identical at this resolution")
+    return "\n".join(lines)
+
+
+def share_regressions(
+    baseline: CallTree,
+    current: CallTree,
+    metric: str = SAMPLES,
+    tolerance: float = 0.05,
+    self_only: bool = True,
+) -> list[tuple[str, float, float, float]]:
+    """Functions whose share *grew* beyond ``tolerance`` vs the baseline.
+
+    The ``profilerd check`` gate: only increases count (a function losing
+    share is someone else's increase), compared on the per-name share vector
+    so run length cancels out.  Returns ``(name, base, cur, delta)`` sorted
+    by descending delta.
+    """
+    base = name_shares(baseline, metric, self_only=self_only)
+    cur = name_shares(current, metric, self_only=self_only)
+    out = []
+    for name in set(base) | set(cur):
+        d = cur.get(name, 0.0) - base.get(name, 0.0)
+        if d > tolerance:
+            out.append((name, base.get(name, 0.0), cur.get(name, 0.0), d))
+    out.sort(key=lambda r: -r[3])
+    return out
 
 
 @dataclass

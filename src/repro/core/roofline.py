@@ -14,7 +14,6 @@ three terms (perfect-overlap bound); the dominant term is the §Perf target.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 from .calltree import CallTree
 from .hlo_tree import COLLECTIVE_OPS

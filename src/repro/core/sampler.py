@@ -34,10 +34,10 @@ import os
 import sys
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Protocol, Sequence, runtime_checkable
 
-from .calltree import SAMPLES, CallTree
+from .calltree import CallTree
 
 # Default matches the paper (§V-E): 0.5 s balances detail vs overhead.
 DEFAULT_PERIOD_S = 0.5

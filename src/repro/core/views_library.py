@@ -45,8 +45,66 @@ VIEWS: dict[str, ViewConfig] = {
         ViewConfig(name="host_checkpoint_writer", root="repro-ckpt", level=-1),
         # ---- anomaly forensics (what the detector saw) ----------------------------
         ViewConfig(name="dominant_leaves", level=-1, min_share=0.10),
+        # ---- timeline / differential -----------------------------------------------
+        # Applied to one sealed epoch *window* (not the cumulative tree):
+        ViewConfig(name="epoch_window_hotspots", level=-1, min_share=0.05),
+        ViewConfig(name="epoch_window_phases", level=2),
+        # Applied to a cross-run diff context before rendering share deltas:
+        ViewConfig(name="diff_regression_context", level=4, min_share=0.01),
     ]
 }
+
+
+# -- timeline views (epoch sequences, not single trees) ----------------------
+
+
+def epoch_share_vectors(epochs, metric: str = "samples") -> list[dict[str, float]]:
+    """Flattened share vector per sealed epoch window (phase-segmentation input)."""
+    from .detector import flat_shares
+
+    return [flat_shares(window, metric) for _meta, window, _cum in epochs]
+
+
+def timeline_table(epochs, metric: str = "samples", k: int = 1) -> str:
+    """One line per sealed epoch: when, how much activity, where it went."""
+    lines = [f"{'epoch':>5}  {'wall_time':>13}  {'window':>9}  {'progress':>8}  top self path"]
+    for meta, window, _cum in epochs:
+        tops = window.hot_paths(metric, k=k, self_only=True)
+        top = "/".join(tops[0][0]) + f" ({tops[0][1]:.0%})" if tops else "-"
+        lines.append(
+            f"{meta.epoch:>5}  {meta.wall_time:>13.2f}  {window.total(metric):>9.6g}  "
+            f"{meta.progress:>8.6g}  {top}"
+        )
+    return "\n".join(lines)
+
+
+def phase_table(epochs, boundary: float = 0.25, metric: str = "samples", k: int = 3) -> str:
+    """Phase segmentation over sealed epochs (the paper's time-evolution view).
+
+    Splits the epoch sequence wherever the window share distribution jumps by
+    more than ``boundary`` (TV distance) and summarizes each phase's top
+    self-time functions — "when did the behavior change, and into what".
+    """
+    from .detector import segment_phases
+    from .report import name_shares
+
+    if not epochs:
+        return "# empty timeline"
+    vectors = epoch_share_vectors(epochs, metric)
+    lines = [f"# {len(epochs)} epoch(s), boundary={boundary}"]
+    for start, end in segment_phases(vectors, boundary):
+        merged = CallTree()
+        wall0 = epochs[start][0].wall_time
+        wall1 = epochs[end][0].wall_time
+        for meta, window, _cum in epochs[start : end + 1]:
+            merged.merge(window)  # merge only reads its argument
+        top = sorted(name_shares(merged, metric).items(), key=lambda kv: -kv[1])[:k]
+        summary = ", ".join(f"{name} {share:.0%}" for name, share in top) or "-"
+        lines.append(
+            f"phase epochs {epochs[start][0].epoch}..{epochs[end][0].epoch} "
+            f"({max(0.0, wall1 - wall0):.1f}s, {merged.total(metric):.6g} {metric}): {summary}"
+        )
+    return "\n".join(lines)
 
 
 def render_view(tree: CallTree, name: str, metric: str | None = None) -> str:

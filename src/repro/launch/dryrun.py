@@ -32,7 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import SHAPES, get_config, list_archs, shape_applicable  # noqa: E402
 from repro.core.hlo_tree import build_device_tree, collective_summary  # noqa: E402
-from repro.core.roofline import V5E, report_from_artifacts  # noqa: E402
+from repro.core.roofline import report_from_artifacts  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_chips  # noqa: E402
 from repro.launch.steps import make_serve_step, make_train_step  # noqa: E402
 from repro.models import Model  # noqa: E402

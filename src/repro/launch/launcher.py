@@ -30,9 +30,7 @@ from __future__ import annotations
 
 import json
 import os
-import signal
 import subprocess
-import sys
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -137,7 +135,70 @@ class Launcher:
         with open(out, "w") as f:
             f.write(merged.to_json())
         self.report.log(f"rendezvous: merged {n} host tree(s) -> {out}")
+        self._merge_timelines()
         return out
+
+    def _merge_timelines(self) -> Optional[str]:
+        """Merge per-host timeline rings epoch-by-epoch at rendezvous.
+
+        Epochs join on their sealed epoch *number*, not list position — ring
+        retention may have dropped a long-running host's oldest segments, so
+        its first retained epoch can be far from 0.  At each merged epoch a
+        host contributes its latest cumulative tree at-or-before that epoch
+        (a host that stopped early keeps contributing its final tree), so the
+        fleet total never dips.  The merged ring lives beside
+        ``merged_tree.json`` and feeds ``profilerd timeline``/``diff``/
+        ``check`` at fleet scope.
+        """
+        from repro.core.calltree import CallTree
+        from repro.core.snapshot import EpochMeta, TimelineReader, TimelineWriter, is_timeline_dir
+
+        # Streamed lock-step merge: each host holds one retained cumulative
+        # copy, never its whole epoch history (a long ring can span 1000+
+        # epochs of 10k-node trees — materializing every cumulative per host
+        # would OOM the launcher at rendezvous).
+        hosts = []  # per host: {"it": epoch iterator, "peek", "meta", "cum"}
+        for entry in sorted(os.listdir(self.cfg.profile_dir)):
+            tdir = os.path.join(self.cfg.profile_dir, entry, "timeline")
+            if entry.endswith(".d") and is_timeline_dir(tdir):
+                it = TimelineReader(tdir).epochs()
+                peek = next(it, None)
+                if peek is not None:
+                    hosts.append({"it": it, "peek": peek, "meta": None, "cum": None})
+        if not hosts:
+            return None
+        out_dir = os.path.join(self.cfg.profile_dir, "merged_timeline")
+        writer = TimelineWriter(out_dir)
+        prev = CallTree()
+        n_merged = 0
+        while any(h["peek"] is not None for h in hosts):
+            epoch = min(h["peek"][0].epoch for h in hosts if h["peek"] is not None)
+            fleet = CallTree()
+            wall = 0.0
+            progress = 0.0
+            for h in hosts:
+                while h["peek"] is not None and h["peek"][0].epoch <= epoch:
+                    meta, _window, cum = h["peek"]
+                    # Copy before advancing: the reader mutates `cum` in place.
+                    h["meta"], h["cum"] = meta, cum.copy()
+                    h["peek"] = next(h["it"], None)
+                if h["cum"] is None:
+                    continue  # host's retained history starts later
+                fleet.merge(h["cum"])
+                wall = max(wall, h["meta"].wall_time)
+                progress += h["meta"].progress
+            meta_out = EpochMeta(epoch, wall, progress)
+            if writer.needs_keyframe():
+                writer.append_full(fleet, meta_out)
+            else:
+                writer.append_delta(fleet.diff(prev), meta_out)
+            prev = fleet
+            n_merged += 1
+        writer.close()
+        self.report.log(
+            f"rendezvous: merged {len(hosts)} host timeline(s) x {n_merged} epoch(s) -> {out_dir}"
+        )
+        return out_dir
 
     def run(self) -> LaunchReport:
         cfg, rep = self.cfg, self.report

@@ -22,7 +22,7 @@ import argparse
 import json
 import os
 import time
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Optional
 
 import jax

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.sharding.ctx import shard_activation
 
-from .modules import ArraySpec, apply_mrope, apply_rope, dense_spec, rms_norm, rms_norm_spec
+from .modules import ArraySpec, apply_mrope, apply_rope, rms_norm, rms_norm_spec
 
 NEG_INF = -2.0e38
 

@@ -9,7 +9,7 @@ vocabulary across all ten architectures.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ that ``repro.core.hlo_tree`` attributes cost to.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax

@@ -12,8 +12,7 @@ compile-time/memory trade at 90+ layers.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

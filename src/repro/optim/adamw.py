@@ -8,7 +8,7 @@ arithmetic is fp32 regardless of parameter dtype.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Union
+from typing import Union
 
 import jax
 import jax.numpy as jnp

@@ -11,11 +11,20 @@ Typical flow (the paper's workflow, one process over):
 
 Subcommands:
 
-  attach  — drain the spool until the target says BYE (or dies), publishing
-            status.json / tree.json / events.jsonl / report.html under --out
-            (default <spool>.d); --follow prints live hot paths.
-  status  — print the latest status.json published by a running daemon.
-  report  — render an HTML report from a previously dumped tree.json.
+  attach   — drain the spool until the target says BYE (or dies), publishing
+             status.json / tree.json / events.jsonl / report.html / timeline/
+             under --out (default <spool>.d); --follow prints live hot paths.
+  status   — print the latest status.json published by a running daemon.
+  report   — render an HTML report from a previously dumped tree.json.
+  timeline — phase segmentation + per-epoch table over a sealed timeline ring.
+  diff     — cross-run tree diff with per-node share deltas.
+  check    — gate a profile against a baseline snapshot (CI): exit 0 on pass,
+             2 on share regression beyond --tolerance, 3 on unreadable input.
+
+``timeline``/``diff``/``check`` accept profiles in any of these shapes: a
+daemon --out dir (uses its ``timeline/`` ring, falling back to ``tree.json``),
+a timeline ring dir, a ``tree.json`` dump, or a binary ``.snap`` snapshot
+(``repro.core.snapshot.save_snapshot``).
 """
 
 from __future__ import annotations
@@ -27,8 +36,52 @@ import sys
 
 from repro.core.detector import Rule
 
-from .daemon import DaemonConfig, ProfilerDaemon
+from .daemon import TIMELINE_DIRNAME, DaemonConfig, ProfilerDaemon
 from .spool import SpoolError
+
+EXIT_REGRESSION = 2
+EXIT_UNREADABLE = 3
+
+
+class ProfileLoadError(RuntimeError):
+    pass
+
+
+def load_profile(path: str):
+    """Load a CallTree from any profile artifact shape (see module docstring)."""
+    from repro.core.calltree import CallTree
+    from repro.core.snapshot import SnapshotError, TimelineReader, is_timeline_dir, load_snapshot
+
+    if os.path.isdir(path):
+        tdir = os.path.join(path, TIMELINE_DIRNAME)
+        tree_json = os.path.join(path, "tree.json")
+        ring = path if is_timeline_dir(path) else tdir if is_timeline_dir(tdir) else None
+        if ring is not None:
+            try:
+                last = TimelineReader(ring).last()
+            except SnapshotError as e:  # e.g. version skew from a newer build
+                raise ProfileLoadError(f"{ring}: {e}") from None
+            if last is not None:
+                return last[1]
+            # A ring that never got a decodable epoch (e.g. daemon killed
+            # mid-keyframe) must not mask a valid tree.json beside it.
+            if not os.path.exists(tree_json):
+                raise ProfileLoadError(f"{ring}: timeline ring holds no decodable epochs")
+        if os.path.exists(tree_json):
+            return load_profile(tree_json)
+        raise ProfileLoadError(f"{path}: no timeline ring or tree.json inside")
+    if not os.path.exists(path):
+        raise ProfileLoadError(f"{path}: no such profile")
+    if path.endswith(".json"):
+        try:
+            with open(path) as f:
+                return CallTree.from_json(f.read())
+        except (OSError, ValueError, KeyError) as e:
+            raise ProfileLoadError(f"{path}: unreadable tree.json: {e}") from None
+    try:
+        return load_snapshot(path)[1]
+    except (OSError, SnapshotError) as e:
+        raise ProfileLoadError(f"{path}: unreadable snapshot: {e}") from None
 
 
 def _print_status(d: ProfilerDaemon) -> None:
@@ -53,6 +106,7 @@ def cmd_attach(args) -> int:
         stall_timeout_s=args.stall_timeout,
         attach_timeout_s=args.attach_timeout,
         max_seconds=args.max_seconds,
+        epoch_s=args.epoch,
     )
     daemon = ProfilerDaemon(cfg)
     try:
@@ -94,6 +148,104 @@ def cmd_report(args) -> int:
     return 0
 
 
+def cmd_timeline(args) -> int:
+    from repro.core.snapshot import SnapshotError, TimelineReader, is_timeline_dir
+    from repro.core.views_library import phase_table, timeline_table
+
+    store = args.store
+    nested = os.path.join(store, TIMELINE_DIRNAME)
+    if not is_timeline_dir(store) and is_timeline_dir(nested):
+        store = nested
+    if not is_timeline_dir(store):
+        print(f"no timeline ring at {args.store}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    reader = TimelineReader(store)
+    epochs = []  # (meta, window, None): the reader's cumulative is a live
+    final = None  # accumulator, so only the final state is retained here
+    try:
+        for meta, window, cum in reader.epochs():
+            epochs.append((meta, window, None))
+            final = cum
+    except SnapshotError as e:  # e.g. version skew from a newer build
+        print(f"[profilerd] {store}: {e}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    if not epochs:
+        print(f"{store}: timeline ring holds no decodable epochs", file=sys.stderr)
+        return EXIT_UNREADABLE
+    if reader.truncated:
+        print("# note: torn/corrupt record(s) skipped (crash-safe append)", file=sys.stderr)
+    print(phase_table(epochs, boundary=args.boundary, metric=args.metric))
+    print()
+    print(timeline_table(epochs, metric=args.metric))
+    print(f"\ncumulative: {final.total(args.metric):.6g} {args.metric} over {final.node_count()} call sites")
+    return 0
+
+
+def cmd_diff(args) -> int:
+    from repro.core.report import render_diff
+
+    try:
+        a = load_profile(args.a)
+        b = load_profile(args.b)
+    except ProfileLoadError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    print(
+        render_diff(
+            a,
+            b,
+            metric=args.metric,
+            label_a=os.path.basename(args.a.rstrip("/")) or args.a,
+            label_b=os.path.basename(args.b.rstrip("/")) or args.b,
+            min_delta=args.min_delta,
+            max_rows=args.top,
+            self_only=args.self_only,
+        )
+    )
+    return 0
+
+
+def cmd_check(args) -> int:
+    from repro.core.detector import share_distance
+    from repro.core.report import name_shares, share_regressions
+
+    try:
+        baseline = load_profile(args.baseline)
+    except ProfileLoadError as e:
+        print(f"[profilerd] missing/unreadable baseline: {e}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    try:
+        current = load_profile(args.profile)
+    except ProfileLoadError as e:
+        print(f"[profilerd] missing/unreadable profile: {e}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    # An empty profile must not pass vacuously (every baseline function
+    # "lost share"): a gate that stops gating when profiling broke is worse
+    # than a red build.
+    if current.total(args.metric) <= 0:
+        print(f"[profilerd] profile {args.profile} holds no '{args.metric}' data", file=sys.stderr)
+        return EXIT_UNREADABLE
+    if baseline.total(args.metric) <= 0:
+        print(f"[profilerd] baseline {args.baseline} holds no '{args.metric}' data", file=sys.stderr)
+        return EXIT_UNREADABLE
+    self_only = not args.inclusive
+    regs = share_regressions(
+        baseline, current, metric=args.metric, tolerance=args.tolerance, self_only=self_only
+    )
+    dist = share_distance(
+        name_shares(baseline, args.metric, self_only=self_only),
+        name_shares(current, args.metric, self_only=self_only),
+    )
+    verdict = "REGRESSION" if regs else "PASS"
+    print(
+        f"[check] {verdict} tolerance={args.tolerance:.2%} share_distance={dist:.4f} "
+        f"profile={args.profile} baseline={args.baseline}"
+    )
+    for name, b, c, d in regs[: args.top]:
+        print(f"  {d:+7.2%}  {b:7.2%} -> {c:7.2%}  {name}")
+    return EXIT_REGRESSION if regs else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.profilerd", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -110,6 +262,8 @@ def main(argv=None) -> int:
     at.add_argument("--attach-timeout", type=float, default=30.0)
     at.add_argument("--max-seconds", type=float, default=None, help="bound the attach run")
     at.add_argument("--follow", action="store_true", help="print live hot paths every window")
+    at.add_argument("--epoch", type=float, default=5.0,
+                    help="timeline epoch seconds (0 disables the timeline ring)")
     at.set_defaults(fn=cmd_attach)
 
     st = sub.add_parser("status", help="print the latest published status.json")
@@ -121,9 +275,45 @@ def main(argv=None) -> int:
     rp.add_argument("--html", default=None)
     rp.set_defaults(fn=cmd_report)
 
+    tl = sub.add_parser("timeline", help="phase segmentation + epoch table over a timeline ring")
+    tl.add_argument("--store", required=True, help="timeline ring dir (or a daemon --out dir)")
+    tl.add_argument("--boundary", type=float, default=0.25,
+                    help="TV-distance jump that starts a new phase")
+    tl.add_argument("--metric", default="samples")
+    tl.set_defaults(fn=cmd_timeline)
+
+    df = sub.add_parser("diff", help="cross-run tree diff (per-node share deltas)")
+    df.add_argument("a", help="baseline profile (out dir / timeline / tree.json / .snap)")
+    df.add_argument("b", help="candidate profile")
+    df.add_argument("--metric", default="samples")
+    df.add_argument("--min-delta", type=float, default=0.002, help="hide smaller share deltas")
+    df.add_argument("--top", type=int, default=40, help="max rows")
+    df.add_argument("--self-only", action="store_true", help="diff self shares instead of inclusive")
+    df.set_defaults(fn=cmd_diff)
+
+    ck = sub.add_parser("check", help="gate a profile against a baseline (CI; exit 2 on regression)")
+    ck.add_argument("profile", help="profile to check (out dir / timeline / tree.json / .snap)")
+    ck.add_argument("--baseline", required=True, help="reference profile")
+    ck.add_argument("--tolerance", type=float, default=0.05,
+                    help="max allowed per-function share increase")
+    ck.add_argument("--metric", default="samples")
+    ck.add_argument("--inclusive", action="store_true",
+                    help="compare inclusive shares instead of self shares")
+    ck.add_argument("--top", type=int, default=20, help="max regression rows printed")
+    ck.set_defaults(fn=cmd_check)
+
     args = ap.parse_args(argv)
     return args.fn(args)
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    try:
+        rc = main()
+    except BrokenPipeError:
+        # `profilerd timeline ... | head` is routine; die quietly.  Point
+        # stdout at devnull so the interpreter's shutdown flush of the
+        # broken pipe can't raise a second traceback.
+        devnull = os.open(os.devnull, os.O_WRONLY)
+        os.dup2(devnull, sys.stdout.fileno())
+        rc = 0
+    raise SystemExit(rc)

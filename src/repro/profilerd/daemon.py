@@ -27,11 +27,12 @@ import json
 import os
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from repro.core.calltree import CallTree
-from repro.core.detector import DominanceDetector, Rule
+from repro.core.detector import DominanceDetector, Rule, TrendDetector, TrendRule
+from repro.core.snapshot import CountSealer, TimelineWriter
 
 from .ingest import TreeIngestor
 from .resolver import SymbolResolver
@@ -39,6 +40,7 @@ from .spool import SpoolReader
 from .wire import Bye, Decoder, Hello, RawSample, Rusage
 
 STALLED = "TARGET_STALLED"
+TIMELINE_DIRNAME = "timeline"
 
 
 def spawn_attached_daemon(
@@ -48,6 +50,7 @@ def spawn_attached_daemon(
     interval_s: float = 1.0,
     collapse_origins: Sequence[str] = (),
     stall_timeout_s: Optional[float] = None,
+    epoch_s: Optional[float] = None,
     cwd: Optional[str] = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
@@ -74,6 +77,8 @@ def spawn_attached_daemon(
         cmd += ["--collapse", ",".join(collapse_origins)]
     if stall_timeout_s is not None:
         cmd += ["--stall-timeout", str(stall_timeout_s)]
+    if epoch_s is not None:
+        cmd += ["--epoch", str(epoch_s)]
     return subprocess.Popen(
         cmd, cwd=cwd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL
     )
@@ -94,9 +99,19 @@ class DaemonConfig:
     hot_k: int = 10
     timeline_cap: int = 2048
     window_ring: int = 32
+    # Timeline ring: every epoch_s the current window is sealed into an
+    # on-disk segment under <out>/timeline (0 disables; a final epoch is
+    # always sealed at shutdown so short runs still leave a timeline).
+    epoch_s: float = 5.0
+    epochs_per_segment: int = 16
+    max_segments: int = 64
+    trend_rule: Optional[TrendRule] = None
 
     def resolved_out_dir(self) -> str:
         return self.out_dir or f"{self.spool_path}.d"
+
+    def resolved_timeline_dir(self) -> str:
+        return os.path.join(self.resolved_out_dir(), TIMELINE_DIRNAME)
 
 
 def _pid_alive(pid: int) -> bool:
@@ -134,6 +149,18 @@ class ProfilerDaemon:
         self.tree = self.ingestor.tree
         self.detector = DominanceDetector(list(cfg.rules) if cfg.rules else [Rule()])
         self.detector.add_callback(self._on_anomaly)
+        # Timeline plane: epoch sealer + trend detection over sealed windows.
+        self.timeline_writer: Optional[TimelineWriter] = None
+        self.sealer: Optional[CountSealer] = None
+        self.trend: Optional[TrendDetector] = None
+        if cfg.epoch_s > 0:
+            self.timeline_writer = TimelineWriter(
+                cfg.resolved_timeline_dir(),
+                epochs_per_segment=cfg.epochs_per_segment,
+                max_segments=cfg.max_segments,
+            )
+            self.sealer = CountSealer(self.tree, self.timeline_writer)
+            self.trend = TrendDetector(cfg.trend_rule)
         self.events: list[dict] = []
         self.timeline: deque = deque(maxlen=cfg.timeline_cap)
         self.rusage: deque = deque(maxlen=cfg.timeline_cap)
@@ -226,6 +253,45 @@ class ProfilerDaemon:
 
     # -- analysis / publication ---------------------------------------------
 
+    def seal_epoch(self) -> None:
+        """Seal the current window into the timeline ring + run trend rules.
+
+        The ingestor hands over the node chains it touched this epoch, so
+        sealing costs O(touched paths); legacy v1 samples (untracked
+        mutations) force the sealer's full-walk fallback.
+        """
+        if self.sealer is None:
+            return
+        entries, untracked = self.ingestor.drain_epoch()
+        try:
+            meta = self.sealer.seal(entries, wall_time=time.time(), untracked=untracked)
+        except OSError as e:
+            self._record_event(
+                {"kind": "TIMELINE_WRITE_FAILED", "path": [], "share": 0.0,
+                 "error": str(e), "wall_time": time.time()}
+            )
+            return
+        # The trend window: rebuilt from the epoch's (chain, count) pairs —
+        # untracked mutations (v1 samples) are invisible here, which only
+        # softens detection for legacy spools, never correctness of the ring.
+        window = CallTree()
+        for e in entries:
+            if e[3] > 0:
+                window.add_stack([n.name for n in e[0][1:]], {"samples": float(e[3])})
+        for v in self.trend.observe_epoch(
+            window, progress=meta.progress, epoch=meta.epoch, wall_time=meta.wall_time
+        ):
+            self._record_event(
+                {
+                    "kind": v.kind,
+                    "path": list(v.path),
+                    "share": round(v.share, 4),
+                    "epoch": v.epoch,
+                    "began_epoch": v.began_epoch,
+                    "wall_time": v.wall_time,
+                }
+            )
+
     def _check_stall(self) -> None:
         if self.bye_seen or self._stalled:
             return
@@ -285,6 +351,16 @@ class ProfilerDaemon:
             "depth_timeline": [[round(t, 4), d] for t, d in self.timeline],
             "events": self.events[-20:],
             "windows": len(self.windows),
+            "timeline": (
+                {
+                    "dir": self.cfg.resolved_timeline_dir(),
+                    "epochs": self.sealer.epoch,
+                    "call_sites": self.sealer.node_count,
+                    "epoch_s": self.cfg.epoch_s,
+                }
+                if self.sealer is not None
+                else None
+            ),
             "updated": time.time(),
         }
 
@@ -305,6 +381,7 @@ class ProfilerDaemon:
         if self.reader is None:
             self.attach()
         next_publish = time.monotonic() + self.cfg.publish_interval_s
+        next_epoch = time.monotonic() + self.cfg.epoch_s if self.sealer is not None else None
         while True:
             self.drain()
             now = time.monotonic()
@@ -313,6 +390,9 @@ class ProfilerDaemon:
                 if on_publish is not None:
                     on_publish(self)
                 next_publish = now + self.cfg.publish_interval_s
+            if next_epoch is not None and now >= next_epoch:
+                self.seal_epoch()
+                next_epoch = now + self.cfg.epoch_s
             if self.bye_seen:  # drain() above already emptied the spool
                 break
             if self.cfg.max_seconds is not None and now - self._t_start >= self.cfg.max_seconds:
@@ -322,10 +402,13 @@ class ProfilerDaemon:
                 break
             time.sleep(self.cfg.drain_interval_s)
         self.drain()
+        self.seal_epoch()  # final epoch: short runs still leave a timeline
         self.publish()
         if on_publish is not None:
             on_publish(self)
         self.write_report()
+        if self.timeline_writer is not None:
+            self.timeline_writer.close()
         if self.reader is not None:
             self.reader.close()
         return self.tree

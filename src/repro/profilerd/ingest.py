@@ -15,13 +15,26 @@ v1 samples (no ``stack_id``) fall back to the per-frame resolve + generic
 
 The cache never needs invalidation: the tree only grows, chains reference
 live accumulator nodes, and collapse settings are fixed per daemon run.
+
+Epoch dirty tracking
+--------------------
+
+The timeline sealer (:class:`repro.core.snapshot.CountSealer`) needs to know
+*which* chains changed during an epoch — and by how much — without walking
+the tree.  Each cache entry carries an epoch stamp and a per-epoch hit count:
+the first hit per epoch appends the entry to an epoch-local dirty list, every
+hit bumps the count (one integer compare + one integer add per sample — the
+fast lane stays flat).  :meth:`drain_epoch` hands the dirty entries to the
+sealer and opens the next epoch.  v1 samples mutate the tree outside the
+chain cache, so they flip an ``untracked`` flag that forces the sealer to
+write a keyframe instead of a counts record.
 """
 
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
-from repro.core.calltree import CallNode, CallTree
+from repro.core.calltree import CallTree
 
 from .resolver import SymbolResolver
 from .wire import RawSample
@@ -47,9 +60,13 @@ class TreeIngestor:
         self.tree = tree if tree is not None else CallTree()
         self.resolver = resolver if resolver is not None else SymbolResolver(collapse_origins)
         self.max_paths = max_paths
-        # (thread_name, stack_id) -> (node chain incl. root + thread node,
-        # resolved stack depth for the timeline).
-        self._paths: dict[tuple[str, int], tuple[list[CallNode], int]] = {}
+        # (thread_name, stack_id) -> [node chain incl. root + thread node,
+        # resolved stack depth for the timeline, epoch stamp of last hit,
+        # samples ingested through this chain in the current epoch].
+        self._paths: dict[tuple[str, int], list] = {}
+        self._epoch = 0
+        self._epoch_entries: list[list] = []
+        self._epoch_untracked = False
         self.fast_hits = 0
         self.slow_ingests = 0
 
@@ -58,23 +75,48 @@ class TreeIngestor:
         sid = sample.stack_id
         if sid is not None:
             key = (sample.thread_name, sid)
-            cached = self._paths.get(key)
-            if cached is not None:
-                chain, depth = cached
-                CallTree.add_stack_nodes(chain)
+            entry = self._paths.get(key)
+            if entry is not None:
+                if entry[2] != self._epoch:
+                    entry[2] = self._epoch
+                    entry[3] = 0
+                    self._epoch_entries.append(entry)
+                entry[3] += 1
+                CallTree.add_stack_nodes(entry[0])
                 self.fast_hits += 1
-                return depth
+                return entry[1]
             stack = self.resolver.resolve_stack_interned(sid, sample.frames)
             chain = self.tree.path_nodes([f"thread::{sample.thread_name}"] + stack)
             if len(self._paths) < self.max_paths:
-                self._paths[key] = (chain, len(stack))
+                entry = [chain, len(stack), self._epoch, 1]
+                self._paths[key] = entry
+                self._epoch_entries.append(entry)
+            else:
+                # Not cached: hits can't be counted next epoch either, so
+                # sealing must keyframe instead of trusting the entry set.
+                self._epoch_untracked = True
             CallTree.add_stack_nodes(chain)
             self.slow_ingests += 1
             return len(stack)
         stack = self.resolver.resolve_stack(sample.frames)
         self.tree.add_stack([f"thread::{sample.thread_name}"] + stack)
+        self._epoch_untracked = True
         self.slow_ingests += 1
         return len(stack)
+
+    def drain_epoch(self) -> tuple[list[list], bool]:
+        """Close the current epoch: ``(dirty entries, untracked_mutations)``.
+
+        Each entry is ``[chain, depth, stamp, count]`` — ``count`` samples
+        were ingested through ``chain`` this epoch.  ``untracked_mutations``
+        is True when the tree changed outside the chain cache (v1 samples,
+        cache overflow); the caller must then seal from the full tree instead
+        of trusting the entry set.
+        """
+        entries, self._epoch_entries = self._epoch_entries, []
+        untracked, self._epoch_untracked = self._epoch_untracked, False
+        self._epoch += 1
+        return entries, untracked
 
     def stats(self) -> dict:
         return {

@@ -1,0 +1,95 @@
+"""Deterministic synthetic profiling workload for the CI profile gate.
+
+Simulates a steady serve-like host plane — a fixed set of stacks hit with
+fixed weights over a fixed number of epochs, no RNG, no wall clock — so every
+run (any OS, any Python >= 3.10) produces the *identical* call tree.  CI's
+``profile-gate`` job runs this, seals a timeline, and ``profilerd check``s
+the result against the committed baseline snapshot ``ci_baseline.snap``;
+``--inject-hot-loop`` adds a synthetic regression (a spin stack stealing a
+third of the samples) that the gate must reject.
+
+Usage::
+
+  python tests/data/gen_workload.py --out /tmp/gate          # profile + timeline
+  python tests/data/gen_workload.py --out /tmp/bad --inject-hot-loop
+  python tests/data/gen_workload.py --snapshot tests/data/ci_baseline.snap
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):  # `python tests/data/gen_workload.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.core.calltree import CallTree  # noqa: E402
+from repro.core.snapshot import EpochSealer, TimelineWriter, save_snapshot  # noqa: E402
+
+EPOCHS = 8
+TICKS_PER_EPOCH = 100
+
+# (stack root->leaf, samples per tick) — a steady serving profile.
+WORKLOAD: list[tuple[list[str], int]] = [
+    (["thread::MainThread", "serve_step", "model", "attention", "scores"], 4),
+    (["thread::MainThread", "serve_step", "model", "attention", "context"], 2),
+    (["thread::MainThread", "serve_step", "model", "mlp", "gate_proj"], 3),
+    (["thread::MainThread", "serve_step", "model", "lm_head"], 1),
+    (["thread::MainThread", "serve_step", "sampler", "top_p"], 1),
+    (["thread::prefetch-0", "data", "pipeline", "next_batch"], 2),
+    (["thread::repro-ckpt", "checkpoint", "serialize"], 1),
+]
+
+HOT_LOOP = (["thread::MainThread", "serve_step", "spin_retry_loop"], 7)
+
+
+def build(out_dir: str | None, inject_hot_loop: bool = False) -> CallTree:
+    """Run the workload; when ``out_dir`` is set, also seal a timeline ring
+    and dump ``tree.json`` there (the shape a daemon --out dir has)."""
+    tree = CallTree()
+    writer = sealer = None
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        writer = TimelineWriter(os.path.join(out_dir, "timeline"), epochs_per_segment=4)
+        sealer = EpochSealer(tree, writer)
+    workload = list(WORKLOAD)
+    if inject_hot_loop:
+        workload.append(HOT_LOOP)
+    for epoch in range(EPOCHS):
+        chains = []
+        for _tick in range(TICKS_PER_EPOCH):
+            for stack, weight in workload:
+                chain = tree.path_nodes(stack)
+                CallTree.add_stack_nodes(chain, float(weight))
+                chains.append(chain)
+        if sealer is not None:
+            sealer.seal(chains, wall_time=float(epoch))
+    if writer is not None:
+        writer.close()
+    if out_dir is not None:
+        with open(os.path.join(out_dir, "tree.json"), "w") as f:
+            f.write(tree.to_json())
+    return tree
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write tree.json + timeline/ here")
+    ap.add_argument("--snapshot", default=None, help="also save a .snap of the final tree")
+    ap.add_argument("--inject-hot-loop", action="store_true",
+                    help="add a synthetic regression (spin stack)")
+    args = ap.parse_args(argv)
+    if args.out is None and args.snapshot is None:
+        ap.error("need --out and/or --snapshot")
+    tree = build(args.out, args.inject_hot_loop)
+    if args.snapshot:
+        save_snapshot(tree, args.snapshot)
+        print(f"snapshot: {args.snapshot}")
+    if args.out:
+        print(f"profile: {args.out} (total={tree.total():.0f} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

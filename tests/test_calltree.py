@@ -2,7 +2,6 @@
 
 import math
 
-import pytest
 
 try:
     from hypothesis import given, settings

@@ -2,11 +2,9 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (
-    CallTree,
     build_device_tree,
     collective_summary,
     parse_hlo_module,
@@ -148,8 +146,6 @@ ENTRY %main (p0: f32[4]) -> f32[4] {
 
 class TestCollectives:
     def make_sharded(self):
-        import os
-
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         if len(jax.devices()) < 2:

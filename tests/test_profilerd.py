@@ -31,7 +31,7 @@ except ImportError:  # keep property tests running where hypothesis is absent
     from _hypothesis_fallback import given, settings
     from _hypothesis_fallback import strategies as st
 
-from repro.core import CallTree, SamplerConfig, StackSampler, collapse_stack, frame_symbol, make_sampler
+from repro.core import CallTree, SamplerConfig, StackSampler, make_sampler
 from repro.profilerd.agent import Agent, DaemonBackend
 from repro.profilerd.daemon import STALLED, DaemonConfig, ProfilerDaemon
 from repro.profilerd.ingest import TreeIngestor
@@ -625,11 +625,17 @@ class TestDaemonLifecycle:
         agent.stop()
         out = str(tmp_path / "out")
         ProfilerDaemon(DaemonConfig(spool_path=spool, out_dir=out, max_seconds=10)).run()
-        assert sorted(os.listdir(out)) == ["report.html", "status.json", "tree.json"]
+        assert sorted(os.listdir(out)) == ["report.html", "status.json", "timeline", "tree.json"]
         status = json.load(open(os.path.join(out, "status.json")))
         assert status["done"] and status["n_stacks"] > 0 and status["hot_paths"]
         tree = CallTree.from_json(open(os.path.join(out, "tree.json")).read())
         assert tree.total() == status["n_stacks"]
+        # The sealed timeline reconstructs the exact merged tree.
+        from repro.core.snapshot import TimelineReader
+
+        last = TimelineReader(os.path.join(out, "timeline")).last()
+        assert last is not None and last[1].root == tree.root
+        assert status["timeline"]["epochs"] >= 1
 
 
 class TestBackendParity:

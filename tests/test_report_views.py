@@ -1,12 +1,9 @@
 """Report/views tests: HTML export, ViewConfig semantics, views library."""
 
-import json
 
-import jax
-import pytest
 
-from repro.core import CallTree, ViewConfig, breakdown, render_html, write_report
-from repro.core.views_library import VIEWS, list_views, render_view
+from repro.core import CallTree, ViewConfig, render_html, write_report
+from repro.core.views_library import list_views, render_view
 
 
 def sample_tree():

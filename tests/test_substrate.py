@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, sharding rules."""
 
-import math
 import os
 
 import jax
@@ -17,7 +16,7 @@ except ImportError:  # keep property tests running where hypothesis is absent
 
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, Pipeline, SyntheticLM
-from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 
 
 class TestAdamW:

@@ -2,9 +2,7 @@
 
 import json
 import os
-import subprocess
 import sys
-import time
 
 import numpy as np
 import pytest
