@@ -41,6 +41,7 @@ _EXPORTS = {
     "frame_symbol": ".sampler",
     "make_sampler": ".sampler",
     "ViewConfig": ".report",
+    "NO_MATCH_MARKER": ".report",
     "breakdown": ".report",
     "diff_rows": ".report",
     "name_shares": ".report",
@@ -49,6 +50,14 @@ _EXPORTS = {
     "save_views": ".report",
     "share_regressions": ".report",
     "write_report": ".report",
+    "EXPORT_FORMATS": ".export",
+    "build_diff_tree": ".export",
+    "diff_flamegraph_html": ".export",
+    "export_tree": ".export",
+    "flamegraph_html": ".export",
+    "from_folded": ".export",
+    "to_folded": ".export",
+    "to_speedscope": ".export",
     # device plane (imports jax on first access)
     "BlockwiseEngine": ".engines",
     "CompiledEngine": ".engines",

@@ -65,12 +65,17 @@ def render_html(tree: CallTree, title: str = "repro call-tree", metric: str = SA
         _node_html(c, total, metric, 0, max_depth)
         for c in sorted(tree.root.children.values(), key=lambda c: -c.metrics.get(metric, 0.0))
     )
+    # The JSON blob lives inside a <script> element: a frame named
+    # "</script>" (or anything containing "</") would terminate the element
+    # early and spill the rest of the tree into the page as markup — where
+    # the browser swallows anything tag-shaped (e.g. "<module>").  "<\/" is
+    # the identical JSON string, and can never close the script element.
     return _PAGE.format(
         title=html.escape(title),
         metric=html.escape(metric),
         total=tree.total(metric),
         body=body,
-        json_blob=tree.to_json(),
+        json_blob=tree.to_json().replace("</", "<\\/"),
     )
 
 
@@ -193,6 +198,21 @@ def share_regressions(
     return out
 
 
+#: Row prepended to a view CSV whose ``root=`` matched no node.
+NO_MATCH_MARKER = "# no match for root="
+
+#: Row prepended to a view CSV whose filters/whitelist removed every row
+#: (the root *did* match — distinct from :data:`NO_MATCH_MARKER`).
+EMPTY_VIEW_MARKER = "# empty view: filters removed every row"
+
+
+def min_share_marker(min_share: float) -> str:
+    """Marker row for a ``min_share`` threshold that pruned every row —
+    shared by :meth:`ViewConfig.to_csv` and ``repro.core.export.prepare_view``
+    so the CSV body and the CLI/server verdicts can never drift apart."""
+    return f"# empty view: min_share={min_share:g} pruned every row"
+
+
 @dataclass
 class ViewConfig:
     """One exploration config (artifact §G): root, fold level, filters."""
@@ -215,16 +235,62 @@ class ViewConfig:
             t = t.levels(self.level)
         return t
 
+    def matches(self, tree: CallTree) -> bool:
+        """False when ``root=`` selected nothing — the view is vacuously empty.
+
+        An empty zoom is indistinguishable from "this run genuinely spent
+        nothing there" in the output rows, so consumers (the ``profilerd
+        export`` CLI, CI scripts) must be able to tell the difference and
+        fail loudly instead of shipping an empty CSV.
+        """
+        if not self.root:
+            return True
+        return bool(tree.zoom(lambda n, r=self.root: r in n).root.children)
+
+    def empty_marker(self, tree: CallTree) -> Optional[str]:
+        """The marker row this view's emptiness deserves, or ``None``.
+
+        One source of truth for :meth:`to_csv` and the ``profilerd export``
+        exit code: "root selected nothing" and "root matched but the
+        white/blacklist removed every row" are different operator errors and
+        get different markers.  (level=0 folding everything into the root is
+        not empty for CSV — the header total says it all — and an empty
+        input tree is the caller's business.)
+        """
+        if self.root and not self.matches(tree):
+            return f"{NO_MATCH_MARKER}{self.root}"
+        if (self.whitelist or self.blacklist) and tree.root.children:
+            # Judge the filters *before* the level fold: level=0 collapsing a
+            # perfectly matching view into the root is not "filters removed
+            # every row".
+            t = tree
+            if self.root:
+                t = t.zoom(lambda n, r=self.root: r in n)
+            if not t.filtered(self.whitelist, self.blacklist).root.children:
+                return EMPTY_VIEW_MARKER
+        return None
+
     def to_csv(self, tree: CallTree) -> str:
         t = self.apply(tree)
         total = max(t.total(self.metric), 1e-12)
         rows = [f"# view={self.name} metric={self.metric} total={total:.6g}", "path,value,share"]
+        if not t.root.children:
+            marker = self.empty_marker(tree)
+            if marker is not None:
+                rows.append(marker)
+                return "\n".join(rows)
+        shown = 0
         for path, node in t.root.walk():
             if node is t.root:
                 continue
             v = node.metrics.get(self.metric, 0.0)
             if v / total >= self.min_share:
                 rows.append(f"{'/'.join(path[1:])},{v:.6g},{v / total:.4f}")
+                shown += 1
+        if shown == 0 and self.min_share > 0 and t.root.children:
+            # Same contract as the no-match markers: a threshold that prunes
+            # every row must say so, not ship a header-only table.
+            rows.append(min_share_marker(self.min_share))
         return "\n".join(rows)
 
 
@@ -245,12 +311,40 @@ def breakdown(tree: CallTree, level: int = 1, metric: str = SAMPLES, min_share: 
     return out
 
 
-def save_views(tree: CallTree, configs: list[ViewConfig], out_dir: str) -> list[str]:
+_VIEW_EXT = {"csv": "csv", "folded": "folded", "speedscope": "speedscope.json", "html": "html", "json": "json"}
+
+
+def save_views(
+    tree: CallTree,
+    configs: list[ViewConfig],
+    out_dir: str,
+    formats: tuple[str, ...] = ("csv",),
+) -> list[str]:
+    """Write every view in every requested format (default: CSV, as before).
+
+    Non-CSV formats route through :func:`repro.core.export.export_tree`, so
+    ``formats=("csv", "folded", "html")`` turns the whole view library into
+    flamegraph-ready artifacts in one call.  A view that comes out empty
+    (no-match root, filters, min_share) writes its marker row as the
+    artifact body instead of a vacuously empty file — same contract as the
+    CSV markers and the ``profilerd export`` exit code.
+    """
     os.makedirs(out_dir, exist_ok=True)
     written = []
     for cfg in configs:
-        p = os.path.join(out_dir, f"{cfg.name}.csv")
-        with open(p, "w") as f:
-            f.write(cfg.to_csv(tree))
-        written.append(p)
+        for fmt in formats:
+            p = os.path.join(out_dir, f"{cfg.name}.{_VIEW_EXT.get(fmt, fmt)}")
+            if fmt == "csv":
+                payload = cfg.to_csv(tree)
+            else:
+                from .export import export_tree, prepare_view
+
+                applied, metric, marker = prepare_view(tree, cfg, fmt=fmt)
+                if marker is not None:
+                    payload = marker + "\n"
+                else:
+                    payload = export_tree(applied, fmt, metric=metric, title=cfg.name)
+            with open(p, "w") as f:
+                f.write(payload)
+            written.append(p)
     return written

@@ -116,5 +116,16 @@ def render_view(tree: CallTree, name: str, metric: str | None = None) -> str:
     return cfg.to_csv(tree)
 
 
+def export_view(tree: CallTree, name: str, fmt: str = "csv", metric: str | None = None) -> str:
+    """Render a library view in any export format (folded/speedscope/html/...).
+
+    The format-agnostic sibling of :func:`render_view`: the whole 20+ view
+    library becomes flamegraph/speedscope material through one call.
+    """
+    from .export import export_tree
+
+    return export_tree(tree, fmt, view=name, metric=metric, title=name)
+
+
 def list_views() -> list[str]:
     return sorted(VIEWS)

@@ -50,6 +50,10 @@ class LaunchConfig:
     # spools/trees land here and merge at rendezvous.
     profile_dir: Optional[str] = None
     profile_period_s: float = 0.2
+    # When set (with profile_dir), serve the rendezvous-merged fleet tree
+    # over the profilerd HTTP query plane on this port (0 = ephemeral) once
+    # the job ends; the server runs on a daemon thread (see Launcher.server).
+    serve_port: Optional[int] = None
 
 
 @dataclass
@@ -67,6 +71,7 @@ class Launcher:
     def __init__(self, cfg: LaunchConfig):
         self.cfg = cfg
         self.report = LaunchReport()
+        self.server = None  # ProfileServer over the merged profile (serve_port)
         self._daemons: list[subprocess.Popen] = []
         if cfg.profile_dir and not os.path.isabs(cfg.profile_dir):
             # The launcher, the daemon (cwd=workdir), and the child all touch
@@ -136,7 +141,32 @@ class Launcher:
             f.write(merged.to_json())
         self.report.log(f"rendezvous: merged {n} host tree(s) -> {out}")
         self._merge_timelines()
+        self._serve_merged()
         return out
+
+    def _serve_merged(self) -> None:
+        """Expose the fleet-merged profile over the HTTP query plane.
+
+        The paper's cross-host aggregation becomes queryable the moment the
+        job ends: ``/tree?fmt=html`` is the fleet flamegraph, ``/timeline``
+        replays the merged epoch ring, ``/diff?baseline=`` compares against
+        any earlier run.  The server thread is a daemon thread — callers that
+        want it to outlive ``run()`` keep the process alive (or use
+        ``python -m repro.profilerd serve --profile <profile_dir>``).
+        """
+        if self.cfg.serve_port is None or self.server is not None:
+            return
+        from repro.profilerd.server import OfflineSource, ProfileServer
+
+        try:
+            self.server = ProfileServer(
+                OfflineSource(self.cfg.profile_dir, label="fleet-merged"),
+                port=self.cfg.serve_port,
+            ).start()
+        except OSError as e:  # port taken: the job result must still land
+            self.report.log(f"rendezvous: serve failed ({e})")
+            return
+        self.report.log(f"rendezvous: merged profile served at {self.server.url}")
 
     def _merge_timelines(self) -> Optional[str]:
         """Merge per-host timeline rings epoch-by-epoch at rendezvous.

@@ -23,31 +23,57 @@ never instrumented.  This package is that plane for JAX jobs:
 * :mod:`repro.profilerd.daemon`   — drains the spool, merges into a
   :class:`~repro.core.calltree.CallTree`, runs dominance/stall detection
   out-of-process, publishes live status and HTML/JSON reports;
-* ``python -m repro.profilerd``   — attach to a running job by spool path.
+* :mod:`repro.profilerd.server`   — live HTTP query plane (``/status``,
+  ``/tree``, ``/timeline``, ``/diff``) over a running daemon's published
+  snapshots or any offline profile artifact, plus the terminal ``top`` view;
+* :mod:`repro.profilerd.profiles` — one loader for every profile shape
+  (daemon out dir, timeline ring, ``tree.json``, ``.snap``);
+* ``python -m repro.profilerd``   — attach to a running job by spool path,
+  ``serve``/``top``/``export`` the resulting profiles.
 
 ``benchmarks/ingest_throughput.py`` measures the v1 -> v2 win (samples/sec
 and bytes/sample across depths and repeat ratios).
 """
 
-from .agent import Agent, DaemonBackend
-from .daemon import DaemonConfig, ProfilerDaemon
-from .ingest import TreeIngestor
-from .resolver import SymbolResolver
-from .spool import SpoolReader, SpoolWriter
-from .wire import WIRE_VERSION, Decoder, Encoder, RawFrame, RawSample
+from importlib import import_module
 
-__all__ = [
-    "Agent",
-    "DaemonBackend",
-    "DaemonConfig",
-    "ProfilerDaemon",
-    "SymbolResolver",
-    "SpoolReader",
-    "SpoolWriter",
-    "TreeIngestor",
-    "Decoder",
-    "Encoder",
-    "RawFrame",
-    "RawSample",
-    "WIRE_VERSION",
-]
+# Lazy exports (PEP 562, same pattern as repro.core): the daemon imports this
+# package on every attach and must stay importable in milliseconds, while the
+# serving plane (http.server machinery) is only paid for on first use.
+_EXPORTS = {
+    "Agent": ".agent",
+    "DaemonBackend": ".agent",
+    "DaemonConfig": ".daemon",
+    "ProfilerDaemon": ".daemon",
+    "TreeIngestor": ".ingest",
+    "ProfileLoadError": ".profiles",
+    "load_profile": ".profiles",
+    "SymbolResolver": ".resolver",
+    "LiveSource": ".server",
+    "OfflineSource": ".server",
+    "ProfileServer": ".server",
+    "SharedProfileState": ".server",
+    "SpoolReader": ".spool",
+    "SpoolWriter": ".spool",
+    "WIRE_VERSION": ".wire",
+    "Decoder": ".wire",
+    "Encoder": ".wire",
+    "RawFrame": ".wire",
+    "RawSample": ".wire",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(import_module(module, __name__), name)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

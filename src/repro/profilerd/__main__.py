@@ -13,18 +13,27 @@ Subcommands:
 
   attach   — drain the spool until the target says BYE (or dies), publishing
              status.json / tree.json / events.jsonl / report.html / timeline/
-             under --out (default <spool>.d); --follow prints live hot paths.
+             under --out (default <spool>.d); --follow prints live hot paths;
+             --serve PORT exposes the live HTTP query plane while attached.
+  serve    — HTTP API (/status /tree /timeline /diff) over an *offline*
+             profile artifact (daemon out dir, timeline ring, tree.json,
+             .snap); pointing it at a dir a daemon is still writing works too.
+  top      — refreshing terminal view of the hottest paths + verdicts,
+             polling a serve/attach --serve endpoint.
+  export   — render a profile as folded stacks, speedscope JSON, flamegraph
+             HTML, or a view CSV (exit 4 when --view/--root matches nothing).
   status   — print the latest status.json published by a running daemon.
   report   — render an HTML report from a previously dumped tree.json.
   timeline — phase segmentation + per-epoch table over a sealed timeline ring.
-  diff     — cross-run tree diff with per-node share deltas.
+  diff     — cross-run tree diff with per-node share deltas; --html writes the
+             share-delta flamegraph (red = candidate grew).
   check    — gate a profile against a baseline snapshot (CI): exit 0 on pass,
              2 on share regression beyond --tolerance, 3 on unreadable input.
 
-``timeline``/``diff``/``check`` accept profiles in any of these shapes: a
-daemon --out dir (uses its ``timeline/`` ring, falling back to ``tree.json``),
-a timeline ring dir, a ``tree.json`` dump, or a binary ``.snap`` snapshot
-(``repro.core.snapshot.save_snapshot``).
+``serve``/``export``/``timeline``/``diff``/``check`` accept profiles in any
+of these shapes: a daemon --out dir (uses its ``timeline/`` ring, falling
+back to ``tree.json``), a timeline ring dir, a ``tree.json`` dump, or a
+binary ``.snap`` snapshot (``repro.core.snapshot.save_snapshot``).
 """
 
 from __future__ import annotations
@@ -36,52 +45,13 @@ import sys
 
 from repro.core.detector import Rule
 
-from .daemon import TIMELINE_DIRNAME, DaemonConfig, ProfilerDaemon
+from .daemon import DaemonConfig, ProfilerDaemon
+from .profiles import TIMELINE_DIRNAME, ProfileLoadError, load_profile
 from .spool import SpoolError
 
 EXIT_REGRESSION = 2
 EXIT_UNREADABLE = 3
-
-
-class ProfileLoadError(RuntimeError):
-    pass
-
-
-def load_profile(path: str):
-    """Load a CallTree from any profile artifact shape (see module docstring)."""
-    from repro.core.calltree import CallTree
-    from repro.core.snapshot import SnapshotError, TimelineReader, is_timeline_dir, load_snapshot
-
-    if os.path.isdir(path):
-        tdir = os.path.join(path, TIMELINE_DIRNAME)
-        tree_json = os.path.join(path, "tree.json")
-        ring = path if is_timeline_dir(path) else tdir if is_timeline_dir(tdir) else None
-        if ring is not None:
-            try:
-                last = TimelineReader(ring).last()
-            except SnapshotError as e:  # e.g. version skew from a newer build
-                raise ProfileLoadError(f"{ring}: {e}") from None
-            if last is not None:
-                return last[1]
-            # A ring that never got a decodable epoch (e.g. daemon killed
-            # mid-keyframe) must not mask a valid tree.json beside it.
-            if not os.path.exists(tree_json):
-                raise ProfileLoadError(f"{ring}: timeline ring holds no decodable epochs")
-        if os.path.exists(tree_json):
-            return load_profile(tree_json)
-        raise ProfileLoadError(f"{path}: no timeline ring or tree.json inside")
-    if not os.path.exists(path):
-        raise ProfileLoadError(f"{path}: no such profile")
-    if path.endswith(".json"):
-        try:
-            with open(path) as f:
-                return CallTree.from_json(f.read())
-        except (OSError, ValueError, KeyError) as e:
-            raise ProfileLoadError(f"{path}: unreadable tree.json: {e}") from None
-    try:
-        return load_snapshot(path)[1]
-    except (OSError, SnapshotError) as e:
-        raise ProfileLoadError(f"{path}: unreadable snapshot: {e}") from None
+EXIT_NO_MATCH = 4  # a --view/--root selector matched no node
 
 
 def _print_status(d: ProfilerDaemon) -> None:
@@ -107,9 +77,19 @@ def cmd_attach(args) -> int:
         attach_timeout_s=args.attach_timeout,
         max_seconds=args.max_seconds,
         epoch_s=args.epoch,
+        serve_port=args.serve,
     )
     daemon = ProfilerDaemon(cfg)
     try:
+        daemon.attach()
+        if args.serve is not None:
+            try:
+                print(f"[profilerd] live query plane: {daemon.enable_serving().url}", flush=True)
+            except OSError as e:
+                # A busy/privileged port must not cost the profiling run:
+                # attach continues unserved, like the launcher's fallback.
+                print(f"[profilerd] serve on port {args.serve} failed ({e}); "
+                      "continuing without the query plane", file=sys.stderr)
         tree = daemon.run(on_publish=_print_status if args.follow else None)
     except SpoolError as e:
         print(f"[profilerd] {e}", file=sys.stderr)
@@ -121,6 +101,113 @@ def cmd_attach(args) -> int:
         print(f"[profilerd] event: {json.dumps(ev)}")
     if tree.total() > 0:
         print(tree.render(min_share=0.02, max_depth=4))
+    return 0
+
+
+def cmd_serve(args) -> int:
+    from .server import OfflineSource, ProfileServer
+
+    source = OfflineSource(args.profile)
+    try:
+        source.tree()  # fail fast on an unreadable profile
+    except ProfileLoadError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    try:
+        server = ProfileServer(
+            source, host=args.host, port=args.port, baseline=args.baseline, verbose=args.verbose
+        )
+    except OSError as e:  # busy/privileged port: message, not a traceback
+        print(f"[profilerd] cannot bind {args.host}:{args.port}: {e}", file=sys.stderr)
+        return 1
+    print(f"[profilerd] serving {args.profile} at {server.url}")
+    print(f"[profilerd] endpoints: {server.url}/status /tree /timeline /diff (see /help)")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        print("[profilerd] bye")
+    return 0
+
+
+def cmd_top(args) -> int:
+    from .server import top_loop
+
+    try:
+        return top_loop(args.url, interval_s=args.interval, k=args.k, once=args.once)
+    except KeyboardInterrupt:
+        return 0
+
+
+def cmd_export(args) -> int:
+    from repro.core.export import EXPORT_FORMATS, diff_flamegraph_html, export_tree, prepare_view
+    from repro.core.report import ViewConfig
+
+    try:
+        tree = load_profile(args.profile)
+    except ProfileLoadError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return EXIT_UNREADABLE
+    fmt = args.fmt or ("html" if args.baseline else "folded")
+    view = None
+    if args.view:
+        from repro.core.views_library import VIEWS
+
+        if args.view not in VIEWS:
+            print(f"[profilerd] unknown view {args.view!r}; views: {', '.join(sorted(VIEWS))}",
+                  file=sys.stderr)
+            return EXIT_UNREADABLE
+        view = VIEWS[args.view]
+    # Ad-hoc selectors refine the named view (or stand alone without one).
+    overrides = {k: v for k, v in
+                 [("root", args.root), ("level", args.level), ("min_share", args.min_share)]
+                 if v is not None}
+    if view is not None and overrides:
+        from dataclasses import replace
+
+        view = replace(view, **overrides)
+    elif view is None and overrides:
+        view = ViewConfig(name=args.root or "adhoc", **overrides)
+    # A selector that matches nothing must fail loudly, not ship an empty
+    # artifact that reads as "this code path costs nothing".  prepare_view
+    # applies zoom/filters/level/min_share exactly once and owns every
+    # emptiness verdict (incl. fmt stacklessness, e.g. a level=0 fold).
+    applied, metric, marker = prepare_view(tree, view, args.metric, fmt=fmt)
+    if marker is not None:
+        print(f"[profilerd] {marker}", file=sys.stderr)
+        if fmt == "csv":
+            print(export_tree(tree, "csv", view=view, metric=args.metric, title=args.profile))
+        return EXIT_NO_MATCH
+    if args.baseline:
+        if fmt != "html":  # usage error, not an unreadable profile: exit 2
+            print(f"[profilerd] --baseline renders a diff flamegraph; it requires "
+                  f"--fmt html (got --fmt {fmt})", file=sys.stderr)
+            return 2
+        try:
+            baseline = load_profile(args.baseline)
+        except ProfileLoadError as e:
+            print(f"[profilerd] {e}", file=sys.stderr)
+            return EXIT_UNREADABLE
+        # The baseline goes through the SAME prepare_view pipeline as the
+        # candidate (incl. min_share pruning) — asymmetric filtering would
+        # paint sub-threshold call-sites as phantom share deltas.
+        baseline, _, _ = prepare_view(baseline, view, args.metric)
+        payload = diff_flamegraph_html(baseline, applied, metric,
+                                       title=f"{args.baseline} vs {args.profile}")
+    else:
+        assert fmt in EXPORT_FORMATS
+        title = os.path.basename(args.profile.rstrip("/")) or args.profile
+        if fmt == "csv":
+            payload = export_tree(tree, "csv", view=view, metric=args.metric, title=title)
+        else:
+            if view is not None:
+                title = f"{title} [{view.name}]"
+            payload = export_tree(applied, fmt, metric=metric, title=title)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload)
+        print(f"[profilerd] wrote {args.out} ({len(payload)} bytes, fmt={fmt})")
+    else:
+        print(payload)
     return 0
 
 
@@ -202,6 +289,18 @@ def cmd_diff(args) -> int:
             self_only=args.self_only,
         )
     )
+    if args.html:
+        from repro.core.export import diff_flamegraph_html
+
+        with open(args.html, "w") as f:
+            f.write(
+                diff_flamegraph_html(
+                    a, b, args.metric,
+                    title=f"{os.path.basename(args.a.rstrip('/')) or args.a} vs "
+                          f"{os.path.basename(args.b.rstrip('/')) or args.b}",
+                )
+            )
+        print(f"# diff flamegraph: {args.html}")
     return 0
 
 
@@ -264,7 +363,39 @@ def main(argv=None) -> int:
     at.add_argument("--follow", action="store_true", help="print live hot paths every window")
     at.add_argument("--epoch", type=float, default=5.0,
                     help="timeline epoch seconds (0 disables the timeline ring)")
+    at.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="serve the live HTTP query plane on this port while attached (0 = ephemeral)")
     at.set_defaults(fn=cmd_attach)
+
+    sv = sub.add_parser("serve", help="HTTP API over an offline profile artifact")
+    sv.add_argument("--profile", required=True,
+                    help="profile to serve (out dir / timeline ring / tree.json / .snap)")
+    sv.add_argument("--port", type=int, default=8787)
+    sv.add_argument("--host", default="127.0.0.1")
+    sv.add_argument("--baseline", default=None, help="default baseline for /diff")
+    sv.add_argument("--verbose", action="store_true", help="log every request")
+    sv.set_defaults(fn=cmd_serve)
+
+    tp = sub.add_parser("top", help="refreshing terminal view of a serve endpoint")
+    tp.add_argument("--url", default="http://127.0.0.1:8787", help="serve endpoint base URL")
+    tp.add_argument("--interval", type=float, default=2.0)
+    tp.add_argument("-k", type=int, default=10, help="hot paths shown")
+    tp.add_argument("--once", action="store_true", help="print one frame and exit (CI/tests)")
+    tp.set_defaults(fn=cmd_top)
+
+    ex = sub.add_parser("export", help="render a profile as folded/speedscope/html/csv/json")
+    ex.add_argument("profile", help="profile (out dir / timeline / tree.json / .snap)")
+    ex.add_argument("--fmt", default=None, choices=["csv", "folded", "speedscope", "html", "json"],
+                    help="output format (default: folded; html when --baseline is given)")
+    ex.add_argument("--view", default=None, help="library view name (views_library.list_views())")
+    ex.add_argument("--root", default=None, help="zoom selector (substring); refines --view")
+    ex.add_argument("--level", type=int, default=None, help="fold level (-1 = expand to leaves)")
+    ex.add_argument("--min-share", type=float, default=None, help="prune below this share")
+    ex.add_argument("--metric", default=None)
+    ex.add_argument("--baseline", default=None,
+                    help="render a share-delta diff flamegraph against this profile (--fmt html)")
+    ex.add_argument("--out", default=None, help="write here instead of stdout")
+    ex.set_defaults(fn=cmd_export)
 
     st = sub.add_parser("status", help="print the latest published status.json")
     st.add_argument("--out", required=True, help="daemon artifact dir")
@@ -289,6 +420,8 @@ def main(argv=None) -> int:
     df.add_argument("--min-delta", type=float, default=0.002, help="hide smaller share deltas")
     df.add_argument("--top", type=int, default=40, help="max rows")
     df.add_argument("--self-only", action="store_true", help="diff self shares instead of inclusive")
+    df.add_argument("--html", default=None, metavar="FILE",
+                    help="also write a share-delta diff flamegraph (red = b grew)")
     df.set_defaults(fn=cmd_diff)
 
     ck = sub.add_parser("check", help="gate a profile against a baseline (CI; exit 2 on regression)")

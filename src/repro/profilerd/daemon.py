@@ -35,12 +35,12 @@ from repro.core.detector import DominanceDetector, Rule, TrendDetector, TrendRul
 from repro.core.snapshot import CountSealer, TimelineWriter
 
 from .ingest import TreeIngestor
+from .profiles import TIMELINE_DIRNAME
 from .resolver import SymbolResolver
 from .spool import SpoolReader
 from .wire import Bye, Decoder, Hello, RawSample, Rusage
 
 STALLED = "TARGET_STALLED"
-TIMELINE_DIRNAME = "timeline"
 
 
 def spawn_attached_daemon(
@@ -51,6 +51,7 @@ def spawn_attached_daemon(
     collapse_origins: Sequence[str] = (),
     stall_timeout_s: Optional[float] = None,
     epoch_s: Optional[float] = None,
+    serve_port: Optional[int] = None,
     cwd: Optional[str] = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
@@ -79,6 +80,8 @@ def spawn_attached_daemon(
         cmd += ["--stall-timeout", str(stall_timeout_s)]
     if epoch_s is not None:
         cmd += ["--epoch", str(epoch_s)]
+    if serve_port is not None:
+        cmd += ["--serve", str(serve_port)]
     return subprocess.Popen(
         cmd, cwd=cwd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL
     )
@@ -106,6 +109,12 @@ class DaemonConfig:
     epochs_per_segment: int = 16
     max_segments: int = 64
     trend_rule: Optional[TrendRule] = None
+    # Live HTTP query plane (repro.profilerd.server): serve /status /tree
+    # /timeline /diff while attached.  None disables; 0 binds an ephemeral
+    # port.  Handlers read the published snapshot under a lock — the ingest
+    # path is never touched by a request.
+    serve_port: Optional[int] = None
+    serve_host: str = "127.0.0.1"
 
     def resolved_out_dir(self) -> str:
         return self.out_dir or f"{self.spool_path}.d"
@@ -168,6 +177,10 @@ class ProfilerDaemon:
         # detector diffs consecutive entries internally; the ring also serves
         # retrospective "what changed in the last N windows" queries.
         self.windows: deque = deque(maxlen=cfg.window_ring)
+        # Live query plane (see enable_serving): the publisher hands each
+        # window's status + tree copy to `shared`; HTTP threads read those.
+        self.shared = None
+        self.server = None
         self.target_pid = 0
         self.period_s = 0.0
         self.wire_version = 0  # from HELLO; 0 until the target announced
@@ -315,16 +328,48 @@ class ProfilerDaemon:
                 }
             )
 
+    def enable_serving(self, port: Optional[int] = None, host: Optional[str] = None):
+        """Start the HTTP query plane over this daemon's published state.
+
+        Returns the started :class:`~repro.profilerd.server.ProfileServer`.
+        Reads are decoupled from ingest: every publish window hands a status
+        dict and an immutable tree copy to :class:`SharedProfileState`, and
+        request handlers only ever touch those.
+        """
+        from .server import LiveSource, ProfileServer, SharedProfileState
+
+        if self.server is not None:
+            return self.server
+        self.shared = SharedProfileState()
+        tdir = self.cfg.resolved_timeline_dir() if self.sealer is not None else None
+        source = LiveSource(self.shared, timeline_dir=tdir, label=f"pid={self.target_pid or '?'}")
+        self.server = ProfileServer(
+            source,
+            host=host if host is not None else self.cfg.serve_host,
+            port=port if port is not None else (self.cfg.serve_port or 0),
+        ).start()
+        self._record_event(
+            {"kind": "SERVING", "path": [], "share": 0.0, "url": self.server.url,
+             "wall_time": time.time()}
+        )
+        return self.server
+
     def publish(self) -> None:
         """One analysis window: detector verdicts + status/tree artifacts."""
+        snap = None
         if self._samples_since_publish:
             snap = self.tree.copy()
             self.windows.append((time.time(), snap))
             self.detector.observe(snap)
             self._samples_since_publish = 0
         self._check_stall()
+        status = self.status()
+        if self.shared is not None:
+            # `snap` is never mutated after this point; handlers may read it
+            # concurrently.  Quiet windows keep the previous tree.
+            self.shared.update(status, snap)
         _atomic_write(os.path.join(self.out_dir, "tree.json"), self.tree.to_json())
-        _atomic_write(os.path.join(self.out_dir, "status.json"), json.dumps(self.status()))
+        _atomic_write(os.path.join(self.out_dir, "status.json"), json.dumps(status))
 
     def status(self) -> dict:
         return {
@@ -380,6 +425,15 @@ class ProfilerDaemon:
         final-publish and write the HTML report.  Returns the merged tree."""
         if self.reader is None:
             self.attach()
+        if self.cfg.serve_port is not None and self.server is None:
+            try:
+                self.enable_serving()
+            except OSError as e:
+                # A busy/privileged port must not cost the profiling run.
+                self._record_event(
+                    {"kind": "SERVE_FAILED", "path": [], "share": 0.0,
+                     "error": str(e), "wall_time": time.time()}
+                )
         next_publish = time.monotonic() + self.cfg.publish_interval_s
         next_epoch = time.monotonic() + self.cfg.epoch_s if self.sealer is not None else None
         while True:
@@ -407,6 +461,9 @@ class ProfilerDaemon:
         if on_publish is not None:
             on_publish(self)
         self.write_report()
+        if self.server is not None:
+            self.server.stop()
+            self.server = None
         if self.timeline_writer is not None:
             self.timeline_writer.close()
         if self.reader is not None:

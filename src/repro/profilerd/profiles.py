@@ -1,0 +1,107 @@
+"""Loading profile artifacts, in every shape this repo produces them.
+
+One loader serves the CLI (``timeline``/``diff``/``check``/``export``) and the
+HTTP server's offline mode.  A "profile" is any of:
+
+* a daemon ``--out`` dir (uses its ``timeline/`` ring, falling back to
+  ``tree.json``);
+* a timeline ring dir (``seg-*.tl`` segments);
+* a ``tree.json`` dump (``CallTree.to_json`` schema);
+* a binary ``.snap`` snapshot (``repro.core.snapshot.save_snapshot``).
+"""
+
+from __future__ import annotations
+
+import os
+
+TIMELINE_DIRNAME = "timeline"
+
+
+class ProfileLoadError(RuntimeError):
+    pass
+
+
+def load_profile(path: str):
+    """Load a CallTree from any profile artifact shape (see module docstring)."""
+    from repro.core.calltree import CallTree
+    from repro.core.snapshot import SnapshotError, TimelineReader, is_timeline_dir, load_snapshot
+
+    if os.path.isdir(path):
+        tdir = os.path.join(path, TIMELINE_DIRNAME)
+        tree_json = _tree_json_inside(path)
+        ring = path if is_timeline_dir(path) else tdir if is_timeline_dir(tdir) else None
+        if ring is not None:
+            try:
+                last = TimelineReader(ring).last()
+            except SnapshotError as e:  # e.g. version skew from a newer build
+                raise ProfileLoadError(f"{ring}: {e}") from None
+            if last is not None:
+                return last[1]
+            # A ring that never got a decodable epoch (e.g. daemon killed
+            # mid-keyframe) must not mask a valid tree.json beside it.
+            if tree_json is None:
+                raise ProfileLoadError(f"{ring}: timeline ring holds no decodable epochs")
+        if tree_json is not None:
+            return load_profile(tree_json)
+        raise ProfileLoadError(f"{path}: no timeline ring or tree.json inside")
+    if not os.path.exists(path):
+        raise ProfileLoadError(f"{path}: no such profile")
+    if path.endswith(".json"):
+        try:
+            with open(path) as f:
+                return CallTree.from_json(f.read())
+        except (OSError, ValueError, KeyError) as e:
+            raise ProfileLoadError(f"{path}: unreadable tree.json: {e}") from None
+    try:
+        return load_snapshot(path)[1]
+    except (OSError, SnapshotError) as e:
+        raise ProfileLoadError(f"{path}: unreadable snapshot: {e}") from None
+
+
+def _tree_json_inside(dir_path: str):
+    """A dir's tree dump: ``tree.json`` or the launcher's ``merged_tree.json``."""
+    for name in ("tree.json", "merged_tree.json"):
+        p = os.path.join(dir_path, name)
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def profile_mtime(path: str) -> float:
+    """Newest mtime across the artifacts ``load_profile`` would read.
+
+    The server's offline source caches the loaded tree and re-reads only when
+    this changes, so serving a directory a daemon is *still writing into*
+    stays fresh without re-decoding the ring on every request.
+    """
+    from repro.core.snapshot import list_segments
+
+    candidates = [path]
+    if os.path.isdir(path):
+        tj = _tree_json_inside(path)
+        if tj:
+            candidates.append(tj)
+        for d in (path, os.path.join(path, TIMELINE_DIRNAME)):
+            candidates.extend(list_segments(d))
+    newest = 0.0
+    for p in candidates:
+        try:
+            newest = max(newest, os.path.getmtime(p))
+        except OSError:
+            pass
+    return newest
+
+
+def timeline_dir_of(path: str):
+    """The timeline ring dir behind a profile path, if it has one."""
+    from repro.core.snapshot import is_timeline_dir
+
+    if not os.path.isdir(path):
+        return None
+    if is_timeline_dir(path):
+        return path
+    for name in (TIMELINE_DIRNAME, "merged_timeline"):
+        tdir = os.path.join(path, name)
+        if is_timeline_dir(tdir):
+            return tdir
+    return None

@@ -1,0 +1,507 @@
+"""Live profile query plane: a stdlib HTTP API over any profile source.
+
+The paper's point is observing the system *while it runs*; this module is the
+read side of that.  A :class:`ProfileServer` (plain ``http.server``, zero
+dependencies) exposes:
+
+* ``GET /status``   — the daemon's live status JSON (offline: a synthesized
+  summary of the loaded profile);
+* ``GET /tree``     — the merged call tree through the universal exporter:
+  ``?fmt=csv|folded|speedscope|html|json``, ``?view=<library view>`` or
+  ad-hoc ``?root=&level=&metric=&min_share=``;
+* ``GET /timeline`` — epoch table + phase segmentation over the timeline
+  ring (``?fmt=text|json``);
+* ``GET /diff``     — this profile vs ``?baseline=<profile path>`` (or the
+  server's ``--baseline``): text share deltas, or ``fmt=html`` for the
+  share-delta flamegraph.
+
+Two sources feed it:
+
+* :class:`LiveSource` — a :class:`SharedProfileState` handle the daemon
+  updates **once per publish interval** under a lock with an already-copied
+  tree.  Request handling never touches daemon internals, so serving adds
+  zero work to the ingest path (the lock is held for an attribute swap).
+* :class:`OfflineSource` — any profile artifact on disk (daemon out dir,
+  timeline ring, ``tree.json``, ``.snap``), cached and re-read only when its
+  mtime moves — so pointing it at a dir a daemon is *currently* writing
+  also works.
+
+Responses are bounded (``max_bytes``, HTTP 413 beyond it) so a runaway tree
+cannot OOM a dashboard poller.  ``render_top`` turns ``/status`` JSON into
+the refreshing terminal view behind ``profilerd top``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+from urllib.parse import parse_qs, urlsplit
+
+from repro.core.calltree import CallTree
+from repro.core.export import (
+    CONTENT_TYPES,
+    EXPORT_FORMATS,
+    diff_flamegraph_html,
+    export_tree,
+    prepare_view,
+)
+from repro.core.report import ViewConfig, render_diff
+
+from .profiles import ProfileLoadError, load_profile, profile_mtime, timeline_dir_of
+
+DEFAULT_MAX_BYTES = 16 << 20  # bound any single response body
+MAX_TIMELINE_EPOCHS = 512  # newest epochs served; older ones need the ring
+
+ENDPOINTS = ("/status", "/tree", "/timeline", "/diff")
+
+
+class SharedProfileState:
+    """Daemon -> server hand-off: the latest published status + tree copy.
+
+    The daemon calls :meth:`update` once per publish window with a tree copy
+    it will never mutate again; handlers read the same objects concurrently
+    without copying.  The lock only ever guards attribute swaps.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._status: dict = {}
+        self._tree: Optional[CallTree] = None
+
+    def update(self, status: dict, tree: Optional[CallTree] = None) -> None:
+        with self._lock:
+            self._status = status
+            if tree is not None:
+                self._tree = tree
+
+    def snapshot(self) -> tuple[dict, CallTree]:
+        with self._lock:
+            return self._status, (self._tree if self._tree is not None else CallTree())
+
+
+class LiveSource:
+    """Serve a running daemon through its :class:`SharedProfileState`."""
+
+    def __init__(self, shared: SharedProfileState, timeline_dir: Optional[str] = None, label: str = "live"):
+        self.shared = shared
+        self._timeline_dir = timeline_dir
+        self.label = label
+
+    def status(self) -> dict:
+        status, _ = self.shared.snapshot()
+        return status or {"live": True, "note": "daemon has not published yet"}
+
+    def tree(self) -> CallTree:
+        return self.shared.snapshot()[1]
+
+    def timeline_dir(self) -> Optional[str]:
+        return self._timeline_dir
+
+
+class OfflineSource:
+    """Serve a profile artifact from disk (mtime-cached)."""
+
+    def __init__(self, profile_path: str, label: Optional[str] = None):
+        self.path = profile_path
+        self.label = label or profile_path
+        self._cached: Optional[CallTree] = None
+        self._cached_mtime = -1.0
+        self._lock = threading.Lock()
+
+    def tree(self) -> CallTree:
+        with self._lock:
+            mtime = profile_mtime(self.path)
+            if self._cached is None or mtime > self._cached_mtime:
+                self._cached = load_profile(self.path)
+                self._cached_mtime = mtime
+            return self._cached
+
+    def status(self) -> dict:
+        tree = self.tree()
+        return {
+            "offline": True,
+            "profile": self.path,
+            "n_stacks": tree.total(),
+            "call_sites": tree.node_count(),
+            "depth": tree.depth(),
+            "timeline_dir": self.timeline_dir(),
+            "hot_paths": [
+                {"path": list(p), "share": round(s, 4)} for p, s in tree.hot_paths(k=10)
+            ],
+            "updated": profile_mtime(self.path),
+        }
+
+    def timeline_dir(self) -> Optional[str]:
+        return timeline_dir_of(self.path)
+
+
+class _HTTPError(Exception):
+    def __init__(self, code: int, message: str):
+        super().__init__(message)
+        self.code = code
+
+
+def _one(q: dict, key: str, default: Optional[str] = None) -> Optional[str]:
+    vals = q.get(key)
+    return vals[0] if vals else default
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-profilerd"
+    protocol_version = "HTTP/1.1"
+
+    # self.server is the _Server below (source/baseline/max_bytes/verbose).
+
+    def log_message(self, fmt, *args):  # noqa: A003 - BaseHTTPRequestHandler API
+        if self.server.verbose:
+            super().log_message(fmt, *args)
+
+    def do_GET(self):  # noqa: N802 - BaseHTTPRequestHandler API
+        url = urlsplit(self.path)
+        q = parse_qs(url.query)
+        try:
+            if url.path in ("/", "/help"):
+                body, ctype = self._help(), "text/plain; charset=utf-8"
+            elif url.path == "/status":
+                body, ctype = json.dumps(self.server.source.status(), indent=1), "application/json"
+            elif url.path == "/tree":
+                body, ctype = self._tree(q)
+            elif url.path == "/timeline":
+                body, ctype = self._timeline(q)
+            elif url.path == "/diff":
+                body, ctype = self._diff(q)
+            else:
+                raise _HTTPError(404, f"unknown endpoint {url.path}; try {', '.join(ENDPOINTS)}")
+        except _HTTPError as e:
+            return self._send(e.code, str(e) + "\n", "text/plain; charset=utf-8")
+        except ProfileLoadError as e:
+            return self._send(404, f"profile unreadable: {e}\n", "text/plain; charset=utf-8")
+        except Exception as e:  # a broken query must not kill the server thread
+            return self._send(500, f"internal error: {e!r}\n", "text/plain; charset=utf-8")
+        self._send(200, body, ctype)
+
+    def _send(self, code: int, body: str, ctype: str) -> None:
+        payload = body.encode("utf-8", errors="replace")
+        if len(payload) > self.server.max_bytes:
+            code = 413
+            payload = (
+                f"response of {len(payload)} bytes exceeds the server cap "
+                f"({self.server.max_bytes}); narrow the query (view=, level=, min_share=)\n"
+            ).encode()
+            ctype = "text/plain; charset=utf-8"
+        try:
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(payload)))
+            self.end_headers()
+            self.wfile.write(payload)
+        except (BrokenPipeError, ConnectionResetError):
+            pass  # client went away mid-response; routine for curls/pollers
+
+    # -- endpoints -----------------------------------------------------------
+
+    def _help(self) -> str:
+        return (
+            "repro profilerd serve — endpoints:\n"
+            "  /status                         live daemon status (or offline summary)\n"
+            "  /tree?fmt=csv|folded|speedscope|html|json&view=NAME\n"
+            "       &metric=samples&root=SUBSTR&level=N&min_share=F\n"
+            "  /timeline?fmt=text|json&metric=samples\n"
+            "  /diff?baseline=PATH&fmt=text|html&metric=samples\n"
+        )
+
+    def _baseline_tree(self, path: str) -> CallTree:
+        """Baseline profiles get the same mtime cache as the served profile —
+        a 2s /diff poller must not re-decode a timeline ring every tick."""
+        cache = self.server._baseline_sources
+        src = cache.get(path)
+        if src is None:
+            if len(cache) >= 16:  # a loopback operator can name many paths
+                cache.clear()
+            src = cache[path] = OfflineSource(path)
+        return src.tree()
+
+    def _loopback(self) -> bool:
+        host = self.server.server_address[0]
+        return host.startswith("127.") or host in ("::1", "localhost")
+
+    def _view_from_query(self, q: dict) -> Optional[ViewConfig]:
+        name = _one(q, "view")
+        root = _one(q, "root")
+        level = _one(q, "level")
+        min_share = _one(q, "min_share")
+        base = None
+        if name is not None:
+            from repro.core.views_library import VIEWS
+
+            if name not in VIEWS:
+                raise _HTTPError(404, f"unknown view {name!r}; see views_library.list_views()")
+            base = VIEWS[name]
+        elif root is None and level is None and min_share is None:
+            return None
+        try:
+            from dataclasses import replace
+
+            # Ad-hoc params refine the named view (they are the advertised
+            # way out of a 413), or stand alone when no view= is given.
+            overrides = {}
+            if root is not None:
+                overrides["root"] = root
+            if level is not None:
+                overrides["level"] = int(level)
+            if min_share is not None:
+                overrides["min_share"] = float(min_share)
+            if base is None:
+                return ViewConfig(name=root or "adhoc", **overrides)
+            return replace(base, **overrides) if overrides else base
+        except ValueError as e:
+            raise _HTTPError(400, f"bad view parameters: {e}") from None
+
+    def _tree(self, q: dict) -> tuple[str, str]:
+        fmt = _one(q, "fmt", "csv")
+        if fmt not in EXPORT_FORMATS:
+            raise _HTTPError(400, f"unknown fmt {fmt!r}; choose from {', '.join(EXPORT_FORMATS)}")
+        view = self._view_from_query(q)
+        tree = self.server.source.tree()
+        label = self.server.source.label
+        if fmt == "csv":
+            # The CSV body carries its own marker rows; serve it as-is.
+            return export_tree(tree, "csv", view=view, metric=_one(q, "metric"), title=label), CONTENT_TYPES["csv"]
+        # The stack-shaped formats would ship a silent empty payload — fail
+        # loudly instead (the no-vacuous-empty-artifact contract, HTTP
+        # edition).  prepare_view applies zoom/filters/level/min_share once
+        # and owns every emptiness verdict, including fmt stacklessness.
+        applied, metric, marker = prepare_view(tree, view, _one(q, "metric"), fmt=fmt)
+        if marker is not None:
+            raise _HTTPError(404, marker.lstrip("# "))
+        if view is not None:
+            label = f"{label} [{view.name}]"
+        body = export_tree(applied, fmt, metric=metric, title=label)
+        return body, CONTENT_TYPES[fmt]
+
+    def _read_timeline(self, tdir: str) -> list:
+        """Decode the ring's newest epochs, cached on the segment mtimes.
+
+        Decoding up to ``max_segments`` of keyframes+deltas per request would
+        make a 2-second dashboard poller pay the full ring every tick; the
+        segments only change when the daemon seals an epoch, so key the cache
+        on their (path, mtime) set.  Decoded trees are read-only (their fast
+        lane is empty), so concurrent handlers may share the cached windows.
+        """
+        from repro.core.snapshot import SnapshotError, TimelineReader, list_segments
+
+        def seg_key():
+            out = []
+            for p in list_segments(tdir):
+                try:
+                    out.append((p, os.path.getmtime(p)))
+                except OSError:
+                    pass
+            return tuple(out)
+
+        key = seg_key()
+        cached = getattr(self.server, "_timeline_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        epochs = []
+        try:
+            for meta, window, _cum in TimelineReader(tdir).epochs():
+                epochs.append((meta, window, None))
+                if len(epochs) > MAX_TIMELINE_EPOCHS:
+                    epochs.pop(0)
+        except SnapshotError as e:
+            raise _HTTPError(500, f"timeline unreadable: {e}") from None
+        self.server._timeline_cache = (key, epochs)
+        return epochs
+
+    def _timeline(self, q: dict) -> tuple[str, str]:
+        tdir = self.server.source.timeline_dir()
+        if tdir is None:
+            raise _HTTPError(404, "this profile has no timeline ring (daemon --epoch 0?)")
+        from repro.core.views_library import phase_table, timeline_table
+
+        metric = _one(q, "metric", "samples")
+        fmt = _one(q, "fmt", "text")
+        if fmt not in ("text", "json"):
+            raise _HTTPError(400, f"unknown timeline fmt {fmt!r}; choose text or json")
+        epochs = self._read_timeline(tdir)
+        if not epochs:
+            raise _HTTPError(404, f"{tdir}: timeline ring holds no decodable epochs")
+        if fmt == "json":
+            body = json.dumps(
+                [
+                    {
+                        "epoch": meta.epoch,
+                        "wall_time": meta.wall_time,
+                        "progress": meta.progress,
+                        "window_total": window.total(metric),
+                        "top": [
+                            {"path": list(p), "share": round(s, 4)}
+                            for p, s in window.hot_paths(metric, k=3)
+                        ],
+                    }
+                    for meta, window, _ in epochs
+                ]
+            )
+            return body, "application/json"
+        body = phase_table(epochs, metric=metric) + "\n\n" + timeline_table(epochs, metric=metric)
+        return body, "text/plain; charset=utf-8"
+
+    def _diff(self, q: dict) -> tuple[str, str]:
+        baseline_path = _one(q, "baseline", self.server.baseline)
+        if not baseline_path:
+            raise _HTTPError(400, "need ?baseline=<profile path> (or start the server with --baseline)")
+        # A query-supplied baseline is a server-side filesystem read.  On the
+        # loopback default that is the operator diffing their own files; on
+        # any other bind it would let remote clients probe/read arbitrary
+        # paths, so only the operator-configured --baseline is honored there.
+        if baseline_path != self.server.baseline and not self._loopback():
+            raise _HTTPError(
+                403,
+                "?baseline= paths are only honored on a loopback bind; "
+                "start the server with --baseline to diff on this host",
+            )
+        baseline = self._baseline_tree(baseline_path)
+        current = self.server.source.tree()
+        metric = _one(q, "metric", "samples") or "samples"
+        fmt = _one(q, "fmt", "text")
+        if fmt == "html":
+            title = f"{os.path.basename(baseline_path.rstrip(os.sep)) or baseline_path} vs {self.server.source.label}"
+            return diff_flamegraph_html(baseline, current, metric, title=title), CONTENT_TYPES["html"]
+        if fmt != "text":
+            raise _HTTPError(400, f"unknown diff fmt {fmt!r}; choose text or html")
+        body = render_diff(
+            baseline,
+            current,
+            metric=metric,
+            label_a=os.path.basename(baseline_path.rstrip(os.sep)) or baseline_path,
+            label_b=self.server.source.label,
+        )
+        return body, "text/plain; charset=utf-8"
+
+
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+
+class ProfileServer:
+    """Bind, serve in a background thread, stop on demand.
+
+    ``port=0`` binds an ephemeral port (tests); ``.port``/``.url`` report the
+    actual binding.  The server thread is a daemon thread: an exiting process
+    never hangs on it.
+    """
+
+    def __init__(
+        self,
+        source,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        baseline: Optional[str] = None,
+        max_bytes: int = DEFAULT_MAX_BYTES,
+        verbose: bool = False,
+    ):
+        self.source = source
+        self._httpd = _Server((host, port), _Handler)
+        self._httpd.source = source
+        self._httpd.baseline = baseline
+        self._httpd.max_bytes = max_bytes
+        self._httpd.verbose = verbose
+        self._httpd._timeline_cache = None
+        self._httpd._baseline_sources = {}
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def host(self) -> str:
+        return self._httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "ProfileServer":
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="profilerd-serve", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Blocking variant for the ``profilerd serve`` CLI."""
+        self._httpd.serve_forever()
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+
+# -- terminal `top` ----------------------------------------------------------
+
+
+def fetch_status(base_url: str, timeout: float = 5.0) -> dict:
+    import urllib.request  # ~200ms of ssl/email machinery only `top` needs
+
+    with urllib.request.urlopen(base_url.rstrip("/") + "/status", timeout=timeout) as resp:
+        return json.loads(resp.read().decode("utf-8"))
+
+
+def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
+    """One refresh of the hottest paths + verdicts, `top(1)`-style."""
+    if status.get("offline"):
+        head = (
+            f"profilerd top — {base_url}  [offline profile {status.get('profile', '?')}]\n"
+            f"samples={status.get('n_stacks', 0):.6g} call_sites={status.get('call_sites', 0)} "
+            f"depth={status.get('depth', 0)}"
+        )
+    else:
+        state = "STALLED" if status.get("stalled") else ("done" if status.get("done") else "live")
+        tl = status.get("timeline") or {}
+        head = (
+            f"profilerd top — {base_url}  pid={status.get('pid', '?')} [{state}] "
+            f"wire=v{status.get('wire_version', '?')}\n"
+            f"stacks={status.get('n_stacks', 0)} dropped={status.get('dropped_batches', 0)} "
+            f"epochs={tl.get('epochs', 0)} call_sites={tl.get('call_sites', 0)} "
+            f"windows={status.get('windows', 0)}"
+        )
+    lines = [head, "", f"{'SHARE':>8}  HOTTEST PATHS"]
+    for hp in status.get("hot_paths", [])[:k]:
+        lines.append(f"{hp['share']:8.2%}  {'/'.join(hp['path'])}")
+    if not status.get("hot_paths"):
+        lines.append("      --  (no samples yet)")
+    events = status.get("events", [])
+    if events:
+        lines += ["", "DETECTOR VERDICTS (newest last)"]
+        for ev in events[-5:]:
+            where = "/".join(ev.get("path", [])) or "-"
+            lines.append(f"  {ev.get('kind', '?'):<18} share={ev.get('share', 0):.2f}  {where}")
+    return "\n".join(lines)
+
+
+def top_loop(base_url: str, interval_s: float = 2.0, k: int = 10, once: bool = False) -> int:
+    """Poll ``/status`` and redraw; returns an exit code (1 = unreachable)."""
+    while True:
+        try:
+            status = fetch_status(base_url)
+        except OSError as e:
+            print(f"[profilerd top] {base_url} unreachable: {e}")
+            return 1
+        frame = render_top(status, base_url, k=k)
+        if once:
+            print(frame)
+            return 0
+        print("\x1b[2J\x1b[H" + frame + f"\n\n(refreshing every {interval_s:g}s — Ctrl-C to quit)")
+        if status.get("done"):
+            return 0
+        time.sleep(interval_s)

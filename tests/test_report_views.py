@@ -1,8 +1,7 @@
 """Report/views tests: HTML export, ViewConfig semantics, views library."""
 
-
-
-from repro.core import CallTree, ViewConfig, render_html, write_report
+from repro.core import NO_MATCH_MARKER, CallTree, ViewConfig, render_html, write_report
+from repro.core.report import EMPTY_VIEW_MARKER
 from repro.core.views_library import list_views, render_view
 
 
@@ -24,6 +23,27 @@ class TestHtmlReport:
         # embedded JSON round-trips
         blob = html.split('id="calltree-json">')[1].split("</script>")[0]
         assert CallTree.from_json(blob).total("flops") == sample_tree().total("flops")
+
+    def test_tag_shaped_names_are_escaped_not_swallowed(self):
+        # Regression: a frame named "<module>" must land in the page as
+        # visible text, not as a (vanishing) HTML tag.
+        t = CallTree()
+        t.add_stack(["<module>", "run"])
+        page = render_html(t, title="t")
+        assert "&lt;module&gt;" in page
+
+    def test_script_closing_name_cannot_break_the_json_island(self):
+        # Regression: the embedded JSON blob used to be interpolated raw, so
+        # a frame named "</script>..." terminated the data island early and
+        # spilled the rest of the tree into the page as markup.
+        t = CallTree()
+        t.add_stack(["<module>", "</script><script>alert(1)</script>", "leaf"])
+        page = render_html(t, title="t")
+        blob = page.split('id="calltree-json">')[1].split("</script>")[0]
+        roundtripped = CallTree.from_json(blob)  # "<\/" decodes to "</"
+        assert roundtripped.root == t.root
+        body = page.split('id="calltree-json">')[0]
+        assert "<script>alert(1)" not in body  # never as live markup
 
     def test_write_report_files(self, tmp_path):
         paths = write_report(sample_tree(), str(tmp_path), "r", metric="samples")
@@ -53,6 +73,40 @@ class TestViewConfig:
         t = v.apply(sample_tree())
         assert t.total() == 10  # root metrics kept
         assert "optimizer" not in t.root.children["train_step"].children
+
+    def test_no_match_root_emits_marker_not_vacuous_empty_csv(self):
+        # Regression: root= matching nothing used to render a headers-only
+        # CSV indistinguishable from "this component genuinely costs 0".
+        v = ViewConfig(name="x", root="does_not_exist")
+        csv = v.to_csv(sample_tree())
+        assert f"{NO_MATCH_MARKER}does_not_exist" in csv
+        assert not v.matches(sample_tree())
+        assert ViewConfig(name="y", root="attention").matches(sample_tree())
+        # a rootless view is never "no match"
+        assert ViewConfig(name="z").matches(CallTree())
+
+    def test_matched_root_with_empty_filters_is_not_reported_as_no_match(self):
+        # root matched, but the whitelist removed every row: a *different*
+        # marker — "no match for root=" here would point at the wrong knob.
+        v = ViewConfig(name="x", root="attention", whitelist=["nonexistent_leaf"])
+        csv = v.to_csv(sample_tree())
+        assert NO_MATCH_MARKER not in csv
+        assert EMPTY_VIEW_MARKER in csv
+        assert v.matches(sample_tree())  # the root selector itself is fine
+
+    def test_level_zero_fold_is_not_marked_empty(self):
+        v = ViewConfig(name="x", root="attention", level=0)
+        csv = v.to_csv(sample_tree())
+        assert EMPTY_VIEW_MARKER not in csv and NO_MATCH_MARKER not in csv
+        assert "total=6" in csv  # the fold keeps the total in the header
+
+    def test_matching_whitelist_with_level_zero_is_not_marked_empty(self):
+        # The filters matched; only the level fold emptied the children —
+        # judging filters *after* the fold would falsely blame them.
+        v = ViewConfig(name="x", root="attention", whitelist=["scores"], level=0)
+        csv = v.to_csv(sample_tree())
+        assert EMPTY_VIEW_MARKER not in csv and NO_MATCH_MARKER not in csv
+        assert v.empty_marker(sample_tree()) is None
 
 
 class TestViewsLibrary:
