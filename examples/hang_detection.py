@@ -134,7 +134,7 @@ def part2_daemon_backend(out_dir="/tmp/repro_hang_demo_daemon"):
                 stalled["seen"] = True
                 print(f">>> daemon verdict: {json.dumps(ev)} <<<")
         if stalled["seen"]:
-            d.bye_seen = True  # verdict delivered: end the attach loop
+            d.request_stop()  # verdict delivered: end the attach loop
 
     def wedge_later():
         time.sleep(2.0)

@@ -52,6 +52,10 @@ PATH_CACHE_CAP = 1 << 16
 # `python -m repro.profilerd` to drain.
 ENV_SPOOL = "REPRO_PROFILERD_SPOOL"
 ENV_PERIOD = "REPRO_PROFILERD_PERIOD"
+# Where the external daemon publishes this target's artifacts.  A shared
+# multi-target daemon writes per-target trees under <out>/targets/<name>/,
+# not <spool>.d/, so the launcher passes the per-target dir through this.
+ENV_OUT = "REPRO_PROFILERD_OUT"
 
 
 def classify_frame(filename: str) -> str:
@@ -177,8 +181,10 @@ def make_sampler(config: Optional[SamplerConfig] = None) -> SamplerBackend:
                 period = float(env_period)
             except ValueError:
                 pass
+        env_out = os.environ.pop(ENV_OUT, None)
         config = replace(
-            config, backend="daemon", spool_path=env_spool, spawn_daemon=False, period_s=period
+            config, backend="daemon", spool_path=env_spool, spawn_daemon=False,
+            period_s=period, daemon_out=env_out or config.daemon_out,
         )
     if config.backend == "thread":
         return StackSampler(config)

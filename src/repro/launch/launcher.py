@@ -13,13 +13,19 @@ trainer. Mechanism (the paper's external-observer stance, one level up):
   shrunk fleet resumes with re-partitioned data shards — checkpoints store
   logical state only, never device layouts.
 
-**Per-host profiling daemons** (``profile_dir``): the launcher attaches one
-``python -m repro.profilerd`` to every supervised process — the child only
-publishes raw frames to a spool (it picks the daemon backend up from
-``REPRO_PROFILERD_SPOOL``, no config change needed), the daemon aggregates
-out-of-process, and at rendezvous (job end) the per-host/per-attempt trees
-are merged with ``CallTree.merge`` into ``merged_tree.json`` — the paper's
-cross-host aggregation, with zero profiling work inside any trainer.
+**Shared per-node profiling daemon** (``profile_dir``): the launcher starts
+ONE ``python -m repro.profilerd attach --watch <profile_dir>`` per node — the
+children only publish raw frames to per-attempt spools (they pick the daemon
+backend up from ``REPRO_PROFILERD_SPOOL``, no config change needed), and the
+single daemon discovers each spool as it appears, aggregates every target
+out-of-process into per-target trees plus a continuously merged fleet tree
+(``fleet.d/tree.json``), and re-attaches across child restarts.  At
+rendezvous (job end) the daemon gets SIGTERM (clean final drain + publish)
+and the merge step just collects the already-merged fleet tree — for
+co-located workers the rendezvous merge is a no-op; ``CallTree.merge``
+across ``*.d`` dirs only does real work when multiple nodes' daemons
+contributed.  This is the paper's single-external-observer design at node
+scope, with zero profiling work inside any trainer.
 
 On a real multi-pod deployment this wraps the per-host ``jax.distributed``
 bring-up; in this container it supervises local subprocesses, and the tests
@@ -46,8 +52,8 @@ class LaunchConfig:
     max_restarts: int = 3
     backoff_s: float = 1.0
     env: dict = field(default_factory=dict)
-    # When set, attach one repro.profilerd daemon per supervised process;
-    # spools/trees land here and merge at rendezvous.
+    # When set, one shared repro.profilerd daemon per node watches this dir;
+    # per-attempt spools land here and the fleet tree merges at rendezvous.
     profile_dir: Optional[str] = None
     profile_period_s: float = 0.2
     # When set (with profile_dir), serve the rendezvous-merged fleet tree
@@ -90,31 +96,58 @@ class Launcher:
             spool = os.path.join(self.cfg.profile_dir, f"attempt{attempt}.spool")
             env["REPRO_PROFILERD_SPOOL"] = spool
             env["REPRO_PROFILERD_PERIOD"] = str(self.cfg.profile_period_s)
-            self._attach_daemon(spool)
+            # The shared daemon publishes this attempt's artifacts under its
+            # per-target dir, not <spool>.d — point the child's DaemonBackend
+            # (snapshot()/depth_trace()/wait-for-done) at the right place.
+            env["REPRO_PROFILERD_OUT"] = os.path.join(
+                self.cfg.profile_dir, "fleet.d", "targets", f"attempt{attempt}"
+            )
+            self._ensure_shared_daemon()
         return subprocess.Popen(
             self.cfg.cmd, cwd=self.cfg.workdir, env=env,
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
         )
 
-    # -- per-host profiling daemons ------------------------------------------
+    # -- shared per-node profiling daemon ------------------------------------
 
-    def _attach_daemon(self, spool: str) -> None:
+    def _ensure_shared_daemon(self) -> None:
+        """Start the node's ONE profilerd daemon (idempotent).
+
+        It watches ``profile_dir`` and attaches every ``attempt*.spool`` as
+        the supervised processes create them — restarts included, without
+        multiplying daemon processes or resolver/ingest state.
+        """
+        if self._daemons:
+            return
         from repro.profilerd.daemon import spawn_attached_daemon
 
         os.makedirs(self.cfg.profile_dir, exist_ok=True)
         proc = spawn_attached_daemon(
-            spool,
+            watch_dir=self.cfg.profile_dir,
+            out_dir=os.path.join(self.cfg.profile_dir, "fleet.d"),
             stall_timeout_s=self.cfg.heartbeat_timeout_s,
+            # Die with the launcher: a crashed supervisor must not leak a
+            # watch daemon that has no BYE to exit on.
+            exit_with_pid=os.getpid(),
             cwd=self.cfg.workdir,
         )
         self._daemons.append(proc)
-        self.report.log(f"profilerd attached (spool={spool})")
+        self.report.log(f"profilerd daemon watching {self.cfg.profile_dir} (one per node)")
 
     def _rendezvous_merge(self) -> Optional[str]:
-        """Merge every per-attempt tree the daemons published (CallTree.merge)."""
+        """Collect the fleet tree(s) the node daemon(s) published.
+
+        The shared daemon already merged all co-located targets into
+        ``fleet.d/tree.json``, so with one node this loop is a pass-through;
+        ``CallTree.merge`` only does real work across multiple nodes' out
+        dirs (or legacy per-attempt ``*.spool.d`` layouts).
+        """
         if not self.cfg.profile_dir:
             return None
-        for d in self._daemons:  # daemons exit on BYE / target death
+        for d in self._daemons:
+            # A --watch daemon has no BYE to exit on: SIGTERM asks it for a
+            # clean final drain + seal + publish.
+            d.terminate()
             try:
                 d.wait(timeout=15.0)
             except subprocess.TimeoutExpired:

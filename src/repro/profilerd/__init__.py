@@ -53,6 +53,8 @@ _EXPORTS = {
     "OfflineSource": ".server",
     "ProfileServer": ".server",
     "SharedProfileState": ".server",
+    "SpoolSet": ".sources",
+    "SpoolSource": ".sources",
     "SpoolReader": ".spool",
     "SpoolWriter": ".spool",
     "WIRE_VERSION": ".wire",

@@ -11,13 +11,20 @@ Typical flow (the paper's workflow, one process over):
 
 Subcommands:
 
-  attach   — drain the spool until the target says BYE (or dies), publishing
-             status.json / tree.json / events.jsonl / report.html / timeline/
-             under --out (default <spool>.d); --follow prints live hot paths;
-             --serve PORT exposes the live HTTP query plane while attached.
-  serve    — HTTP API (/status /tree /timeline /diff) over an *offline*
-             profile artifact (daemon out dir, timeline ring, tree.json,
-             .snap); pointing it at a dir a daemon is still writing works too.
+  attach   — drain one or more spools until every target says BYE (or dies),
+             publishing status.json / tree.json / events.jsonl / report.html
+             / timeline/ under --out (default <spool>.d); one daemon attaches
+             a whole fleet: --targets a.spool,b.spool names explicit spools,
+             --watch DIR discovers spools created after the daemon starts
+             (per-target artifacts land under <out>/targets/<name>/, the
+             merged fleet tree stays at <out>/tree.json; a --watch daemon
+             runs until SIGTERM, which triggers a clean final drain+publish);
+             --follow prints live hot paths; --serve PORT exposes the live
+             HTTP query plane while attached.
+  serve    — HTTP API (/status /targets /tree /timeline /diff) over an
+             *offline* profile artifact (daemon out dir — multi-target dirs
+             serve /tree?target=NAME too — timeline ring, tree.json, .snap);
+             pointing it at a dir a daemon is still writing works too.
   top      — refreshing terminal view of the hottest paths + verdicts,
              polling a serve/attach --serve endpoint.
   export   — render a profile as folded stacks, speedscope JSON, flamegraph
@@ -57,8 +64,9 @@ EXIT_NO_MATCH = 4  # a --view/--root selector matched no node
 def _print_status(d: ProfilerDaemon) -> None:
     s = d.status()
     state = "STALLED" if s["stalled"] else ("done" if s["done"] else "live")
+    who = f"targets={s['n_targets']}" if s["n_targets"] > 1 else f"pid={s['pid']}"
     print(
-        f"[profilerd] pid={s['pid']} {state} stacks={s['n_stacks']} "
+        f"[profilerd] {who} {state} stacks={s['n_stacks']} "
         f"dropped={s['dropped_batches']} events={len(d.events)}"
     )
     for hp in s["hot_paths"][:5]:
@@ -66,9 +74,16 @@ def _print_status(d: ProfilerDaemon) -> None:
 
 
 def cmd_attach(args) -> int:
+    targets = tuple(t.strip() for t in (args.targets or "").split(",") if t.strip())
+    if not (args.spool or targets or args.watch):
+        print("[profilerd] attach needs --spool, --targets and/or --watch",
+              file=sys.stderr)
+        return 2
     rules = [Rule(threshold=args.threshold, consecutive=args.consecutive)]
     cfg = DaemonConfig(
         spool_path=args.spool,
+        spool_paths=targets,
+        watch_dir=args.watch,
         out_dir=args.out,
         publish_interval_s=args.interval,
         collapse_origins=tuple(o for o in (args.collapse or "").split(",") if o),
@@ -78,8 +93,18 @@ def cmd_attach(args) -> int:
         max_seconds=args.max_seconds,
         epoch_s=args.epoch,
         serve_port=args.serve,
+        exit_with_pid=args.exit_with,
     )
     daemon = ProfilerDaemon(cfg)
+    # SIGTERM = finish cleanly: final drain + seal + publish + report.  This
+    # is how a supervisor (the launcher's shared per-node daemon, CI) ends a
+    # --watch run, which has no natural BYE to exit on.
+    try:
+        import signal
+
+        signal.signal(signal.SIGTERM, lambda *_: daemon.request_stop())
+    except ValueError:  # not the main thread (embedded use)
+        pass
     try:
         daemon.attach()
         if args.serve is not None:
@@ -96,6 +121,11 @@ def cmd_attach(args) -> int:
         return 1
     out = cfg.resolved_out_dir()
     print(f"[profilerd] merged {daemon.n_stacks} stacks -> {os.path.join(out, 'tree.json')}")
+    if len(daemon.sources) > 1 or args.watch:
+        for s in daemon.sources:
+            print(f"[profilerd] target {s.name}: stacks={s.n_stacks} "
+                  f"dropped={s.dropped_batches} restarts={s.restarts} "
+                  f"-> {os.path.join(out, 'targets', s.name, 'tree.json')}")
     print(f"[profilerd] report: {os.path.join(out, 'report.html')}")
     for ev in daemon.events:
         print(f"[profilerd] event: {json.dumps(ev)}")
@@ -121,7 +151,7 @@ def cmd_serve(args) -> int:
         print(f"[profilerd] cannot bind {args.host}:{args.port}: {e}", file=sys.stderr)
         return 1
     print(f"[profilerd] serving {args.profile} at {server.url}")
-    print(f"[profilerd] endpoints: {server.url}/status /tree /timeline /diff (see /help)")
+    print(f"[profilerd] endpoints: {server.url}/status /targets /tree /timeline /diff (see /help)")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
@@ -349,9 +379,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.profilerd", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
 
-    at = sub.add_parser("attach", help="attach to a spool and stream until the target exits")
-    at.add_argument("--spool", required=True, help="spool file the target publishes to")
-    at.add_argument("--out", default=None, help="artifact dir (default: <spool>.d)")
+    at = sub.add_parser("attach", help="attach to one or more spools and stream until the targets exit")
+    at.add_argument("--spool", default=None, help="spool file the target publishes to")
+    at.add_argument("--targets", default=None, metavar="SPOOL[,SPOOL...]",
+                    help="explicit multi-target attach: comma-separated spool paths")
+    at.add_argument("--watch", default=None, metavar="DIR",
+                    help="attach every *.spool in DIR, incl. ones created later "
+                         "(runs until SIGTERM; clean final drain+publish)")
+    at.add_argument("--out", default=None,
+                    help="artifact dir (default: <spool>.d, or <watch>/fleet.d)")
     at.add_argument("--interval", type=float, default=1.0, help="publish/analysis window seconds")
     at.add_argument("--collapse", default="", help="comma-separated origins to fold (e.g. py,jax)")
     at.add_argument("--threshold", type=float, default=0.9, help="dominance-rule threshold")
@@ -365,6 +401,9 @@ def main(argv=None) -> int:
                     help="timeline epoch seconds (0 disables the timeline ring)")
     at.add_argument("--serve", type=int, default=None, metavar="PORT",
                     help="serve the live HTTP query plane on this port while attached (0 = ephemeral)")
+    at.add_argument("--exit-with", type=int, default=None, metavar="PID",
+                    help="finish cleanly when PID dies (supervisors pass their own "
+                         "pid so a --watch daemon can never be leaked)")
     at.set_defaults(fn=cmd_attach)
 
     sv = sub.add_parser("serve", help="HTTP API over an offline profile artifact")

@@ -1,24 +1,30 @@
 """The profiling daemon: live streaming aggregation in a separate process.
 
-Drains the target's spool, resolves and classifies symbols with an
-interned-symbol cache (:mod:`repro.profilerd.resolver`), merges every sample
-into a :class:`~repro.core.calltree.CallTree`, keeps a ring of windowed
-snapshots driving :class:`~repro.core.detector.DominanceDetector` rules
-out-of-process, and publishes:
+One daemon drains a *fleet* of spools (explicit ``--targets`` paths and/or a
+``--watch`` directory whose new spools attach within one drain interval),
+routes each source through its own decoder/resolver/``TreeIngestor`` into a
+source-tagged forest — per-target trees plus a continuously merged fleet
+tree — and publishes:
 
-* ``status.json`` — live hot paths, depth-timeline tail, detector verdicts,
+* ``status.json`` — fleet hot paths, per-target status rows (drop/stall/bye/
+  backlog/restart state), detector verdicts naming the offending target,
   drop/ingest counters (atomically replaced every publish interval);
-* ``tree.json``   — the full merged tree (the drivers' ``snapshot()`` reads
+* ``tree.json``   — the merged fleet tree (the drivers' ``snapshot()`` reads
   this, so the in-process watchdog works unchanged with the daemon backend);
-* ``events.jsonl``— append-only anomaly log;
-* ``report.html`` / final ``tree.json`` — on-demand / at shutdown via
-  :func:`~repro.core.report.render_html`.
+* ``targets/<name>/`` — per-target ``tree.json`` + ``timeline/`` ring
+  (multi-target mode); the fleet ring under ``<out>/timeline`` is merged at
+  seal time;
+* ``events.jsonl``— append-only anomaly log, each event tagged ``target``;
+* ``report.html`` / final ``tree.json`` — on-demand / at shutdown.
 
 Because the daemon is a separate process it also detects the one failure an
 in-process helper thread cannot: a target whose interpreter is fully wedged
 (GIL held in native code, SIGSTOP, hard livelock).  The agent goes silent,
 the spool stops advancing, and after ``stall_timeout_s`` the daemon emits a
-``TARGET_STALLED`` verdict — see ``examples/hang_detection.py``.
+``TARGET_STALLED`` verdict naming the target — see
+``examples/hang_detection.py``.  A target that crashes and restarts
+recreates its spool; the daemon re-attaches to the new incarnation (old
+bytes drained dry first) instead of reporting a phantom stall.
 """
 
 from __future__ import annotations
@@ -31,27 +37,28 @@ from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from repro.core.calltree import CallTree
-from repro.core.detector import DominanceDetector, Rule, TrendDetector, TrendRule
-from repro.core.snapshot import CountSealer, TimelineWriter
+from repro.core.detector import Rule, TrendRule
+from repro.core.snapshot import EpochMeta, TimelineWriter
 
-from .ingest import TreeIngestor
-from .profiles import TIMELINE_DIRNAME
-from .resolver import SymbolResolver
-from .spool import SpoolReader
-from .wire import Bye, Decoder, Hello, RawSample, Rusage
+from .profiles import TARGETS_DIRNAME, TIMELINE_DIRNAME
+from .sources import STALLED, SpoolSet, SpoolSource, _pid_alive, source_name_for
+from .spool import SpoolError, SpoolReader, _ShortHeader
 
-STALLED = "TARGET_STALLED"
+__all__ = ["STALLED", "DaemonConfig", "ProfilerDaemon", "spawn_attached_daemon"]
 
 
 def spawn_attached_daemon(
-    spool_path: str,
+    spool_path: Optional[str] = None,
     out_dir: Optional[str] = None,
     *,
+    targets: Sequence[str] = (),
+    watch_dir: Optional[str] = None,
     interval_s: float = 1.0,
     collapse_origins: Sequence[str] = (),
     stall_timeout_s: Optional[float] = None,
     epoch_s: Optional[float] = None,
     serve_port: Optional[int] = None,
+    exit_with_pid: Optional[int] = None,
     cwd: Optional[str] = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
@@ -59,7 +66,8 @@ def spawn_attached_daemon(
     The one place that knows the spawn recipe (absolute source root on
     PYTHONPATH so a relative one still resolves from any cwd, CPU-only JAX,
     flag spelling) — used by both :class:`~repro.profilerd.agent.DaemonBackend`
-    and the launcher's per-host attach.  Returns the ``subprocess.Popen``.
+    and the launcher's shared per-node attach.  Returns the
+    ``subprocess.Popen``; send it SIGTERM for a clean final drain + publish.
     """
     import subprocess
     import sys
@@ -68,12 +76,17 @@ def spawn_attached_daemon(
     env = dict(os.environ)
     env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
     env.setdefault("JAX_PLATFORMS", "cpu")
-    cmd = [
-        sys.executable, "-m", "repro.profilerd", "attach",
-        "--spool", spool_path,
-        "--out", out_dir or f"{spool_path}.d",
-        "--interval", str(interval_s),
-    ]
+    cmd = [sys.executable, "-m", "repro.profilerd", "attach"]
+    if spool_path is not None:
+        cmd += ["--spool", spool_path]
+    if targets:
+        cmd += ["--targets", ",".join(targets)]
+    if watch_dir is not None:
+        cmd += ["--watch", watch_dir]
+    default_out = f"{spool_path}.d" if spool_path else None
+    if out_dir or default_out:
+        cmd += ["--out", out_dir or default_out]
+    cmd += ["--interval", str(interval_s)]
     if collapse_origins:
         cmd += ["--collapse", ",".join(collapse_origins)]
     if stall_timeout_s is not None:
@@ -82,6 +95,8 @@ def spawn_attached_daemon(
         cmd += ["--epoch", str(epoch_s)]
     if serve_port is not None:
         cmd += ["--serve", str(serve_port)]
+    if exit_with_pid is not None:
+        cmd += ["--exit-with", str(exit_with_pid)]
     return subprocess.Popen(
         cmd, cwd=cwd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL
     )
@@ -89,8 +104,14 @@ def spawn_attached_daemon(
 
 @dataclass
 class DaemonConfig:
-    spool_path: str
-    out_dir: Optional[str] = None  # default: "<spool_path>.d"
+    # One of spool_path / spool_paths / watch_dir must be set.  A single
+    # spool_path with neither of the others runs in "solo" mode — exactly the
+    # classic one-target layout (flat out dir, CountSealer ring).
+    spool_path: Optional[str] = None
+    spool_paths: tuple[str, ...] = ()  # explicit multi-target attach
+    watch_dir: Optional[str] = None  # attach spools created after daemon start
+    watch_glob: str = "*.spool"
+    out_dir: Optional[str] = None  # default: "<spool_path>.d" / "<watch>/fleet.d"
     publish_interval_s: float = 1.0
     drain_interval_s: float = 0.05
     collapse_origins: tuple[str, ...] = ()
@@ -109,30 +130,35 @@ class DaemonConfig:
     epochs_per_segment: int = 16
     max_segments: int = 64
     trend_rule: Optional[TrendRule] = None
-    # Live HTTP query plane (repro.profilerd.server): serve /status /tree
-    # /timeline /diff while attached.  None disables; 0 binds an ephemeral
-    # port.  Handlers read the published snapshot under a lock — the ingest
-    # path is never touched by a request.
+    # Live HTTP query plane (repro.profilerd.server): serve /status /targets
+    # /tree /timeline /diff while attached.  None disables; 0 binds an
+    # ephemeral port.  Handlers read the published snapshot under a lock —
+    # the ingest path is never touched by a request.
     serve_port: Optional[int] = None
     serve_host: str = "127.0.0.1"
+    # Stop (clean final drain+publish) when this pid dies.  A --watch daemon
+    # has no BYE-based exit, so a supervisor that crashes before sending
+    # SIGTERM would otherwise leak it forever; the launcher passes its own
+    # pid here.
+    exit_with_pid: Optional[int] = None
 
     def resolved_out_dir(self) -> str:
-        return self.out_dir or f"{self.spool_path}.d"
+        if self.out_dir:
+            return self.out_dir
+        if self.spool_path:
+            return f"{self.spool_path}.d"
+        if self.watch_dir:
+            return os.path.join(self.watch_dir, "fleet.d")
+        if self.spool_paths:
+            return f"{self.spool_paths[0]}.d"
+        raise ValueError("DaemonConfig needs spool_path, spool_paths or watch_dir")
 
     def resolved_timeline_dir(self) -> str:
         return os.path.join(self.resolved_out_dir(), TIMELINE_DIRNAME)
 
-
-def _pid_alive(pid: int) -> bool:
-    if pid <= 0:
-        return False
-    try:
-        os.kill(pid, 0)
-    except ProcessLookupError:
-        return False
-    except PermissionError:
-        return True
-    return True
+    def all_spool_paths(self) -> tuple[str, ...]:
+        paths = (self.spool_path,) if self.spool_path else ()
+        return paths + tuple(p for p in self.spool_paths if p != self.spool_path)
 
 
 def _atomic_write(path: str, text: str) -> None:
@@ -143,62 +169,103 @@ def _atomic_write(path: str, text: str) -> None:
 
 
 class ProfilerDaemon:
-    """Streaming aggregator over one target's spool."""
+    """Streaming aggregator over a fleet of target spools."""
 
     def __init__(self, cfg: DaemonConfig):
         self.cfg = cfg
+        if not (cfg.spool_path or cfg.spool_paths or cfg.watch_dir):
+            raise ValueError("DaemonConfig needs spool_path, spool_paths or watch_dir")
         self.out_dir = cfg.resolved_out_dir()
         os.makedirs(self.out_dir, exist_ok=True)
-        self.reader: Optional[SpoolReader] = None
-        self.decoder = Decoder()
-        self.resolver = SymbolResolver(cfg.collapse_origins)
-        # Cached-path ingestion: v2 samples resolve once per (thread, stack_id)
-        # and repeat as an O(depth) float-add loop (see profilerd.ingest).
-        self.ingestor = TreeIngestor(resolver=self.resolver)
-        self.tree = self.ingestor.tree
-        self.detector = DominanceDetector(list(cfg.rules) if cfg.rules else [Rule()])
-        self.detector.add_callback(self._on_anomaly)
-        # Timeline plane: epoch sealer + trend detection over sealed windows.
-        self.timeline_writer: Optional[TimelineWriter] = None
-        self.sealer: Optional[CountSealer] = None
-        self.trend: Optional[TrendDetector] = None
-        if cfg.epoch_s > 0:
-            self.timeline_writer = TimelineWriter(
+        # Solo mode = the classic single-target daemon: flat artifact layout,
+        # the source's tree IS the fleet tree, its CountSealer ring IS the
+        # fleet ring (O(touched chains) per epoch, no merge work at all).
+        self.solo = bool(cfg.spool_path) and not cfg.spool_paths and not cfg.watch_dir
+        self.spools = SpoolSet(
+            paths=cfg.all_spool_paths(),
+            watch_dir=cfg.watch_dir,
+            watch_glob=cfg.watch_glob,
+            make_source=self._make_source,
+        )
+        # Fleet timeline ring (multi mode): per-target rings are sealed by
+        # each source's CountSealer; the fleet ring is merged at seal time.
+        self.fleet_writer: Optional[TimelineWriter] = None
+        if cfg.epoch_s > 0 and not self.solo:
+            self.fleet_writer = TimelineWriter(
                 cfg.resolved_timeline_dir(),
                 epochs_per_segment=cfg.epochs_per_segment,
                 max_segments=cfg.max_segments,
             )
-            self.sealer = CountSealer(self.tree, self.timeline_writer)
-            self.trend = TrendDetector(cfg.trend_rule)
+        self._fleet_prev: Optional[CallTree] = None
+        self._fleet_epoch = 0
+        self._fleet_tree = CallTree()  # latest published merge (multi mode)
+        self._fleet_n = 0  # source count at the last fleet merge
+        self._target_rows: dict[str, str] = {}  # last written status row per target
         self.events: list[dict] = []
-        self.timeline: deque = deque(maxlen=cfg.timeline_cap)
-        self.rusage: deque = deque(maxlen=cfg.timeline_cap)
-        # Ring of windowed snapshots: (wall_time, cumulative-tree copy).  The
-        # detector diffs consecutive entries internally; the ring also serves
-        # retrospective "what changed in the last N windows" queries.
+        # Ring of windowed fleet snapshots: (wall_time, cumulative-tree copy)
+        # serving retrospective "what changed in the last N windows" queries.
         self.windows: deque = deque(maxlen=cfg.window_ring)
         # Live query plane (see enable_serving): the publisher hands each
-        # window's status + tree copy to `shared`; HTTP threads read those.
+        # window's status + tree copies to `shared`; HTTP threads read those.
         self.shared = None
         self.server = None
-        self.target_pid = 0
-        self.period_s = 0.0
-        self.wire_version = 0  # from HELLO; 0 until the target announced
-        self.n_stacks = 0
-        self.dropped_batches = 0
-        self.n_ticks_reported = 0  # from BYE
-        self.bye_seen = False
-        self._last_sample_wall: Optional[float] = None
-        self._samples_since_publish = 0
-        self._stalled = False
+        self._stop_requested = False
+        self._attach_errors: dict[str, str] = {}
+        self._last_attach_error: Optional[SpoolError] = None
         self._t_start = time.monotonic()
+
+    # -- compatibility surface (classic single-target attributes) ------------
+
+    def _solo_source(self) -> Optional[SpoolSource]:
+        if len(self.spools.sources) == 1:
+            return next(iter(self.spools.sources.values()))
+        return None
+
+    @property
+    def sources(self) -> list[SpoolSource]:
+        return list(self.spools.sources.values())
+
+    @property
+    def tree(self) -> CallTree:
+        """The fleet tree: the lone source's live tree, or the latest merge."""
+        src = self._solo_source()
+        if src is not None:
+            return src.tree
+        return self._fleet_tree
+
+    @property
+    def target_pid(self) -> int:
+        src = self._solo_source()
+        return src.target_pid if src is not None else 0
+
+    @property
+    def wire_version(self) -> int:
+        return max((s.wire_version for s in self.sources), default=0)
+
+    @property
+    def n_stacks(self) -> int:
+        return sum(s.n_stacks for s in self.sources)
+
+    @property
+    def n_ticks_reported(self) -> int:
+        return sum(s.n_ticks_reported for s in self.sources)
+
+    @property
+    def dropped_batches(self) -> int:
+        return sum(s.dropped_batches for s in self.sources)
+
+    @property
+    def bye_seen(self) -> bool:
+        srcs = self.sources
+        return bool(srcs) and all(s.bye_seen for s in srcs)
 
     # -- event plumbing ------------------------------------------------------
 
-    def _on_anomaly(self, ev) -> None:
+    def _on_anomaly(self, ev, target: str) -> None:
         self._record_event(
             {
                 "kind": ev.kind,
+                "target": target,
                 "path": list(ev.path),
                 "share": ev.share,
                 "window": ev.window_index,
@@ -214,135 +281,202 @@ class ProfilerDaemon:
         except OSError:
             pass
 
-    # -- ingest --------------------------------------------------------------
+    # -- attach / ingest -----------------------------------------------------
+
+    def _target_dir(self, name: str) -> str:
+        return os.path.join(self.out_dir, TARGETS_DIRNAME, name)
+
+    def _make_source(self, name: str, path: str, reader: Optional[SpoolReader] = None):
+        try:
+            tdir = None
+            if self.cfg.epoch_s > 0:
+                tdir = (
+                    self.cfg.resolved_timeline_dir()
+                    if self.solo
+                    else os.path.join(self._target_dir(name), TIMELINE_DIRNAME)
+                )
+            src = SpoolSource(
+                name,
+                path,
+                reader=reader,
+                collapse_origins=self.cfg.collapse_origins,
+                rules=self.cfg.rules,
+                trend_rule=self.cfg.trend_rule,
+                timeline_dir=tdir,
+                epochs_per_segment=self.cfg.epochs_per_segment,
+                max_segments=self.cfg.max_segments,
+                timeline_cap=self.cfg.timeline_cap,
+            )
+        except (SpoolError, OSError, ValueError) as e:
+            # OSError covers per-target TimelineWriter/dir creation failures
+            # (unwritable out dir): one bad attach must not crash the daemon
+            # for every healthy target.
+            if isinstance(e, SpoolError):
+                self._last_attach_error = e
+            # Log each distinct failure once: a half-created file under
+            # --watch is retried every drain pass and must not spam the log.
+            if self._attach_errors.get(path) != str(e):
+                self._attach_errors[path] = str(e)
+                self._record_event(
+                    {"kind": "SOURCE_ATTACH_FAILED", "target": name, "path": path,
+                     "error": str(e), "wall_time": time.time()}
+                )
+            return None
+        self._attach_errors.pop(path, None)
+        self._last_attach_error = None
+        src.detector.add_callback(lambda ev, _n=name: self._on_anomaly(ev, _n))
+        if not self.solo:
+            os.makedirs(self._target_dir(name), exist_ok=True)
+            self._record_event(
+                {"kind": "TARGET_ATTACHED", "target": name, "path": path,
+                 "pid": src.target_pid, "wall_time": time.time()}
+            )
+        return src
 
     def attach(self) -> "ProfilerDaemon":
-        self.reader = SpoolReader.wait_for(self.cfg.spool_path, self.cfg.attach_timeout_s)
-        self.target_pid = self.reader.writer_pid
+        """Block until at least one source is attached (``attach_timeout_s``).
+
+        Solo mode waits for the one configured spool, exactly as before.
+        Multi mode attaches whatever is already there and returns as soon as
+        one source exists; remaining explicit paths and watch discoveries
+        attach inside the run loop as they appear.
+        """
+        deadline = time.monotonic() + self.cfg.attach_timeout_s
+        while True:
+            self.spools.discover()
+            if self.spools.sources:
+                break
+            # A present-but-garbage spool should fail fast, not time out —
+            # but only when no watch dir could still produce a valid one, and
+            # never on a short header (the file may still be materializing).
+            if (
+                self._last_attach_error is not None
+                and not isinstance(self._last_attach_error, _ShortHeader)
+                and self.cfg.watch_dir is None
+                and all(os.path.exists(p) for p in self.cfg.all_spool_paths())
+            ):
+                raise self._last_attach_error
+            if time.monotonic() >= deadline:
+                what = ", ".join(self.cfg.all_spool_paths()) or f"watch:{self.cfg.watch_dir}"
+                raise SpoolError(
+                    f"spool {what} did not appear within {self.cfg.attach_timeout_s:.0f}s"
+                )
+            if self._stop_requested:
+                raise SpoolError("stopped before any spool appeared")
+            time.sleep(0.05)
         # Silence (stall detection) and max_seconds count from the moment the
-        # target's spool appeared — a target launched long after the daemon
-        # must not start life looking stalled.
+        # first target's spool appeared — a target launched long after the
+        # daemon must not start life looking stalled.
         self._t_start = time.monotonic()
         return self
 
-    def _apply(self, ev) -> None:
-        if isinstance(ev, RawSample):
-            depth = self.ingestor.ingest(ev)
-            self.timeline.append((ev.t, depth))
-            self.n_stacks += 1
-            self._samples_since_publish += 1
-            self._last_sample_wall = time.monotonic()
-            self._stalled = False
-        elif isinstance(ev, Hello):
-            self.target_pid = ev.pid
-            self.period_s = ev.period_s
-            self.wire_version = ev.version
-        elif isinstance(ev, Rusage):
-            self.rusage.append((ev.t, ev.cpu_s, ev.rss_bytes))
-        elif isinstance(ev, Bye):
-            self.bye_seen = True
-            self.n_ticks_reported = ev.n_ticks
-
     def drain(self) -> int:
-        """Pull everything currently in the spool; returns stacks ingested."""
-        assert self.reader is not None, "attach() first"
+        """One full pass: discovery, re-attach checks, then drain every
+        source dry (round-robin bounded chunks).  Returns stacks ingested."""
         before = self.n_stacks
-        while True:
-            # read() is capped (1 MiB/call by default), so a multi-minute
-            # backlog streams through this loop in bounded chunks instead of
-            # materializing as one giant bytes object.
-            chunk = self.reader.read()
-            if not chunk:
-                break
-            for ev in self.decoder.feed(chunk):
-                self._apply(ev)
-        self.dropped_batches = self.reader.dropped
-        # The writer sets the header flag even when the BYE *record* was
-        # dropped on a full spool; once drained, honor it so a cleanly
-        # stopped target is never mistaken for a stalled one.
-        if self.reader.bye_seen:
-            self.bye_seen = True
+        self.spools.discover()
+        for s in self.sources:
+            if s.maybe_reattach():
+                self._record_event(
+                    {"kind": "TARGET_RESTARTED", "target": s.name, "path": s.path,
+                     "pid": s.target_pid, "restarts": s.restarts,
+                     "wall_time": time.time()}
+                )
+        self.spools.drain_all()
         return self.n_stacks - before
+
+    def request_stop(self) -> None:
+        """Ask the run loop to finalize (final drain + seal + publish) and
+        return.  Safe from signal handlers and other threads."""
+        self._stop_requested = True
 
     # -- analysis / publication ---------------------------------------------
 
     def seal_epoch(self) -> None:
-        """Seal the current window into the timeline ring + run trend rules.
+        """Seal the current window into the timeline ring(s) + trend rules.
 
-        The ingestor hands over the node chains it touched this epoch, so
-        sealing costs O(touched paths); legacy v1 samples (untracked
-        mutations) force the sealer's full-walk fallback.
+        Each source's ingestor hands over the chains it touched this epoch,
+        so per-target sealing costs O(touched paths); the fleet ring (multi
+        mode) then merges the per-target trees at seal time — one O(forest)
+        merge per epoch, never per sample.
         """
-        if self.sealer is None:
+        if self.cfg.epoch_s <= 0:
             return
-        entries, untracked = self.ingestor.drain_epoch()
-        try:
-            meta = self.sealer.seal(entries, wall_time=time.time(), untracked=untracked)
-        except OSError as e:
-            self._record_event(
-                {"kind": "TIMELINE_WRITE_FAILED", "path": [], "share": 0.0,
-                 "error": str(e), "wall_time": time.time()}
+        wall = time.time()
+        for s in self.sources:
+            try:
+                meta, verdicts = s.seal_epoch(wall)
+            except OSError as e:
+                self._record_event(
+                    {"kind": "TIMELINE_WRITE_FAILED", "target": s.name, "path": [],
+                     "share": 0.0, "error": str(e), "wall_time": wall}
+                )
+                continue
+            if meta is None:
+                continue
+            for v in verdicts:
+                self._record_event(
+                    {
+                        "kind": v.kind,
+                        "target": s.name,
+                        "path": list(v.path),
+                        "share": round(v.share, 4),
+                        "epoch": v.epoch,
+                        "began_epoch": v.began_epoch,
+                        "wall_time": v.wall_time,
+                    }
+                )
+        if self.fleet_writer is not None and self.sources:
+            fleet = CallTree()
+            for s in self.sources:
+                fleet.merge(s.tree)
+            meta = EpochMeta(
+                self._fleet_epoch,
+                wall,
+                float(sum(s.sealer.node_count for s in self.sources if s.sealer)),
             )
-            return
-        # The trend window: rebuilt from the epoch's (chain, count) pairs —
-        # untracked mutations (v1 samples) are invisible here, which only
-        # softens detection for legacy spools, never correctness of the ring.
-        window = CallTree()
-        for e in entries:
-            if e[3] > 0:
-                window.add_stack([n.name for n in e[0][1:]], {"samples": float(e[3])})
-        for v in self.trend.observe_epoch(
-            window, progress=meta.progress, epoch=meta.epoch, wall_time=meta.wall_time
-        ):
-            self._record_event(
-                {
-                    "kind": v.kind,
-                    "path": list(v.path),
-                    "share": round(v.share, 4),
-                    "epoch": v.epoch,
-                    "began_epoch": v.began_epoch,
-                    "wall_time": v.wall_time,
-                }
-            )
+            try:
+                if self._fleet_prev is None or self.fleet_writer.needs_keyframe():
+                    self.fleet_writer.append_full(fleet, meta)
+                else:
+                    self.fleet_writer.append_delta(fleet.diff(self._fleet_prev), meta)
+            except OSError as e:
+                self._record_event(
+                    {"kind": "TIMELINE_WRITE_FAILED", "target": "<fleet>", "path": [],
+                     "share": 0.0, "error": str(e), "wall_time": wall}
+                )
+                return
+            self._fleet_prev = fleet
+            self._fleet_epoch += 1
 
-    def _check_stall(self) -> None:
-        if self.bye_seen or self._stalled:
-            return
-        ref = self._last_sample_wall
-        if ref is None:
-            ref = self._t_start  # attached but never saw a sample
-        silent = time.monotonic() - ref
-        # A slow-ticking but healthy target must not look stalled: silence is
-        # only suspicious once it clearly exceeds the publisher's own period.
-        timeout = max(self.cfg.stall_timeout_s, 3.0 * self.period_s)
-        if silent >= timeout and _pid_alive(self.target_pid):
-            self._stalled = True
-            self._record_event(
-                {
-                    "kind": STALLED,
-                    "path": [],
-                    "share": 1.0,
-                    "silent_s": round(silent, 3),
-                    "pid": self.target_pid,
-                    "wall_time": time.time(),
-                }
-            )
+    def _check_stalls(self) -> None:
+        for s in self.sources:
+            ev = s.check_stall(self.cfg.stall_timeout_s)
+            if ev is not None:
+                self._record_event(ev)
 
     def enable_serving(self, port: Optional[int] = None, host: Optional[str] = None):
         """Start the HTTP query plane over this daemon's published state.
 
         Returns the started :class:`~repro.profilerd.server.ProfileServer`.
         Reads are decoupled from ingest: every publish window hands a status
-        dict and an immutable tree copy to :class:`SharedProfileState`, and
-        request handlers only ever touch those.
+        dict plus immutable fleet/per-target tree copies to
+        :class:`SharedProfileState`, and request handlers only ever touch
+        those.
         """
         from .server import LiveSource, ProfileServer, SharedProfileState
 
         if self.server is not None:
             return self.server
         self.shared = SharedProfileState()
-        tdir = self.cfg.resolved_timeline_dir() if self.sealer is not None else None
-        source = LiveSource(self.shared, timeline_dir=tdir, label=f"pid={self.target_pid or '?'}")
+        tdir = self.cfg.resolved_timeline_dir() if self.cfg.epoch_s > 0 else None
+        label = f"pid={self.target_pid or '?'}" if self.solo else f"fleet:{self.out_dir}"
+        source = LiveSource(
+            self.shared,
+            timeline_dir=tdir,
+            label=label,
+            target_timeline_dir_fn=None if self.solo else self._target_timeline_dir,
+        )
         self.server = ProfileServer(
             source,
             host=host if host is not None else self.cfg.serve_host,
@@ -354,76 +488,165 @@ class ProfilerDaemon:
         )
         return self.server
 
+    def _target_timeline_dir(self, name: str) -> Optional[str]:
+        if self.cfg.epoch_s <= 0 or name not in self.spools.sources:
+            return None
+        return os.path.join(self._target_dir(name), TIMELINE_DIRNAME)
+
     def publish(self) -> None:
         """One analysis window: detector verdicts + status/tree artifacts."""
-        snap = None
-        if self._samples_since_publish:
-            snap = self.tree.copy()
-            self.windows.append((time.time(), snap))
-            self.detector.observe(snap)
-            self._samples_since_publish = 0
-        self._check_stall()
+        changed = []
+        for s in self.sources:
+            snap = s.publish_window()
+            if snap is not None:
+                changed.append((s, snap))
+        solo_src = self._solo_source()
+        fleet_snap: Optional[CallTree] = None
+        if solo_src is not None:
+            # The lone source's snapshot is the fleet snapshot — no merge.
+            fleet_snap = changed[0][1] if changed else None
+        elif changed or len(self.sources) != self._fleet_n:
+            # Re-merge on new samples, and also when the source set changed —
+            # `tree` switches from the lone source's live tree to the merged
+            # fleet the moment a second target attaches, and the merge must
+            # not lag behind that switch.
+            fleet_snap = CallTree()
+            for s in self.sources:
+                if s.last_snapshot is not None:
+                    fleet_snap.merge(s.last_snapshot)
+            self._fleet_tree = fleet_snap
+            self._fleet_n = len(self.sources)
+        if fleet_snap is not None:
+            self.windows.append((time.time(), fleet_snap))
+        self._check_stalls()
         status = self.status()
         if self.shared is not None:
-            # `snap` is never mutated after this point; handlers may read it
-            # concurrently.  Quiet windows keep the previous tree.
-            self.shared.update(status, snap)
+            # Snapshots are never mutated after this point; handlers may read
+            # them concurrently.  Quiet windows keep the previous trees.
+            self.shared.update(
+                status,
+                fleet_snap,
+                targets={s.name: s.last_snapshot for s in self.sources
+                         if s.last_snapshot is not None},
+            )
         _atomic_write(os.path.join(self.out_dir, "tree.json"), self.tree.to_json())
+        if not self.solo:
+            fresh = {id(s): snap for s, snap in changed}
+            for s in self.sources:
+                # Per-target status: the same artifact contract a solo daemon
+                # gives its target, so a DaemonBackend pointed here via
+                # REPRO_PROFILERD_OUT (the launcher's shared daemon) keeps its
+                # snapshot()/depth_trace()/wait-for-done working unchanged.
+                # Quiet, unchanged targets are skipped — a long-lived watch
+                # daemon must not rewrite N done targets' files every window.
+                row = s.status_row()
+                row_key = json.dumps(row, sort_keys=True)
+                snap = fresh.get(id(s))
+                if snap is None and self._target_rows.get(s.name) == row_key:
+                    continue
+                tdir = self._target_dir(s.name)
+                os.makedirs(tdir, exist_ok=True)
+                if snap is not None:
+                    _atomic_write(os.path.join(tdir, "tree.json"), snap.to_json())
+                row["depth_timeline"] = [[round(t, 4), d] for t, d in s.timeline]
+                row["updated"] = status["updated"]
+                _atomic_write(os.path.join(tdir, "status.json"), json.dumps(row))
+                self._target_rows[s.name] = row_key
         _atomic_write(os.path.join(self.out_dir, "status.json"), json.dumps(status))
 
     def status(self) -> dict:
+        srcs = self.sources
+        solo_src = self._solo_source()
+        tree = self.tree
+        if solo_src is not None:
+            depth_timeline = [[round(t, 4), d] for t, d in solo_src.timeline]
+        else:
+            merged = sorted(
+                (t, d) for s in srcs for t, d in s.timeline
+            )[-self.cfg.timeline_cap :]
+            depth_timeline = [[round(t, 4), d] for t, d in merged]
+        if self.cfg.epoch_s > 0:
+            if self.solo and solo_src is not None and solo_src.sealer is not None:
+                timeline_block = {
+                    "dir": self.cfg.resolved_timeline_dir(),
+                    "epochs": solo_src.sealer.epoch,
+                    "call_sites": solo_src.sealer.node_count,
+                    "epoch_s": self.cfg.epoch_s,
+                }
+            else:
+                timeline_block = {
+                    "dir": self.cfg.resolved_timeline_dir(),
+                    "epochs": self._fleet_epoch,
+                    "call_sites": sum(s.sealer.node_count for s in srcs if s.sealer),
+                    "epoch_s": self.cfg.epoch_s,
+                }
+        else:
+            timeline_block = None
         return {
-            "pid": self.target_pid,
-            "alive": _pid_alive(self.target_pid),
-            "stalled": self._stalled,
+            "pid": solo_src.target_pid if solo_src is not None else 0,
+            "alive": any(s.alive for s in srcs),
+            "stalled": any(s.stalled for s in srcs),
             "done": self.bye_seen,
-            "period_s": self.period_s,
+            "period_s": solo_src.period_s if solo_src is not None
+            else max((s.period_s for s in srcs), default=0.0),
             "wire_version": self.wire_version,
             "n_stacks": self.n_stacks,
             "n_ticks": self.n_ticks_reported,
             "dropped_batches": self.dropped_batches,
-            "resolver": {"hits": self.resolver.hits, "misses": self.resolver.misses},
-            "ingest": self.ingestor.stats(),
+            "resolver": {
+                "hits": sum(s.resolver.hits for s in srcs),
+                "misses": sum(s.resolver.misses for s in srcs),
+            },
+            "ingest": {
+                "fast_hits": sum(s.ingestor.fast_hits for s in srcs),
+                "slow_ingests": sum(s.ingestor.slow_ingests for s in srcs),
+                "cached_paths": sum(s.ingestor.stats()["cached_paths"] for s in srcs),
+            },
             # Degraded-mode accounting for re-attaching mid-stream (a
             # previous reader consumed the STRDEF/STACKDEF definitions):
             # such samples ingest as "?" placeholder stacks, never silently.
-            "unknown_stack_refs": self.decoder.unknown_stack_refs,
-            "degraded_stackdefs": self.decoder.degraded_stackdefs,
+            "unknown_stack_refs": sum(s.unknown_stack_refs for s in srcs),
+            "degraded_stackdefs": sum(s.degraded_stackdefs for s in srcs),
+            "n_targets": len(srcs),
+            "watch": self.cfg.watch_dir,
+            "targets": {s.name: s.status_row() for s in srcs},
             "hot_paths": [
                 {"path": list(p), "share": round(s, 4)}
-                for p, s in self.tree.hot_paths(k=self.cfg.hot_k)
+                for p, s in tree.hot_paths(k=self.cfg.hot_k)
             ],
-            "depth_timeline": [[round(t, 4), d] for t, d in self.timeline],
+            "depth_timeline": depth_timeline,
             "events": self.events[-20:],
             "windows": len(self.windows),
-            "timeline": (
-                {
-                    "dir": self.cfg.resolved_timeline_dir(),
-                    "epochs": self.sealer.epoch,
-                    "call_sites": self.sealer.node_count,
-                    "epoch_s": self.cfg.epoch_s,
-                }
-                if self.sealer is not None
-                else None
-            ),
+            "timeline": timeline_block,
             "updated": time.time(),
         }
 
     def write_report(self, name: str = "report") -> str:
         from repro.core.report import render_html
 
-        path = os.path.join(self.out_dir, f"{name}.html")
-        _atomic_write(
-            path, render_html(self.tree, title=f"profilerd pid={self.target_pid}")
+        title = (
+            f"profilerd pid={self.target_pid}"
+            if self.solo
+            else f"profilerd fleet ({len(self.sources)} targets)"
         )
+        path = os.path.join(self.out_dir, f"{name}.html")
+        _atomic_write(path, render_html(self.tree, title=title))
         return path
 
     # -- main loop -----------------------------------------------------------
 
+    def _all_done(self) -> bool:
+        srcs = self.sources
+        if not srcs or not self.spools.all_explicit_attached:
+            return False
+        return all(s.bye_seen or not s.alive for s in srcs)
+
     def run(self, on_publish=None) -> CallTree:
-        """Attach, stream until BYE / target death / ``max_seconds``, then
-        final-publish and write the HTML report.  Returns the merged tree."""
-        if self.reader is None:
+        """Attach, stream until every target says BYE / dies (explicit
+        targets), a stop is requested (``--watch`` mode, SIGTERM), or
+        ``max_seconds`` — then final-publish and write the HTML report.
+        Returns the merged fleet tree."""
+        if not self.spools.sources:
             self.attach()
         if self.cfg.serve_port is not None and self.server is None:
             try:
@@ -435,10 +658,25 @@ class ProfilerDaemon:
                      "error": str(e), "wall_time": time.time()}
                 )
         next_publish = time.monotonic() + self.cfg.publish_interval_s
-        next_epoch = time.monotonic() + self.cfg.epoch_s if self.sealer is not None else None
+        next_epoch = (
+            time.monotonic() + self.cfg.epoch_s if self.cfg.epoch_s > 0 else None
+        )
         while True:
             self.drain()
             now = time.monotonic()
+            # An explicit target whose spool never appeared must not pin the
+            # run open forever: after the attach window it is abandoned with
+            # a loud event, and _all_done() can then see the real targets.
+            if (
+                not self.spools.all_explicit_attached
+                and now - self._t_start >= self.cfg.attach_timeout_s
+            ):
+                for p in self.spools.abandon_pending():
+                    self._record_event(
+                        {"kind": "TARGET_NEVER_APPEARED", "target": source_name_for(p),
+                         "path": p, "timeout_s": self.cfg.attach_timeout_s,
+                         "wall_time": time.time()}
+                    )
             if now >= next_publish:
                 self.publish()
                 if on_publish is not None:
@@ -447,15 +685,23 @@ class ProfilerDaemon:
             if next_epoch is not None and now >= next_epoch:
                 self.seal_epoch()
                 next_epoch = now + self.cfg.epoch_s
-            if self.bye_seen:  # drain() above already emptied the spool
+            if self.cfg.exit_with_pid is not None and not _pid_alive(self.cfg.exit_with_pid):
+                self._record_event(
+                    {"kind": "SUPERVISOR_GONE", "pid": self.cfg.exit_with_pid,
+                     "wall_time": time.time()}
+                )
+                self.request_stop()
+            if self._stop_requested:
+                break
+            # drain() above already emptied every spool.  A --watch daemon
+            # outlives done targets: new spools may appear at any time, so it
+            # only exits on request_stop()/SIGTERM or max_seconds.
+            if self.cfg.watch_dir is None and self._all_done():
                 break
             if self.cfg.max_seconds is not None and now - self._t_start >= self.cfg.max_seconds:
                 break
-            if not _pid_alive(self.target_pid):
-                self.drain()  # the target died: salvage what it left behind
-                break
             time.sleep(self.cfg.drain_interval_s)
-        self.drain()
+        self.drain()  # salvage whatever dead/late targets left behind
         self.seal_epoch()  # final epoch: short runs still leave a timeline
         self.publish()
         if on_publish is not None:
@@ -464,8 +710,8 @@ class ProfilerDaemon:
         if self.server is not None:
             self.server.stop()
             self.server = None
-        if self.timeline_writer is not None:
-            self.timeline_writer.close()
-        if self.reader is not None:
-            self.reader.close()
+        if self.fleet_writer is not None:
+            self.fleet_writer.close()
+        for s in self.sources:
+            s.close()
         return self.tree

@@ -104,6 +104,17 @@ class TreeIngestor:
         self.slow_ingests += 1
         return len(stack)
 
+    def reset_chain_cache(self) -> None:
+        """Forget every ``(thread, stack_id)`` -> chain association.
+
+        Required on writer re-attach: a restarted target re-assigns stack ids
+        from 0, so a cached id could silently route a different stack through
+        an old chain.  Counts already drained into the current epoch stay
+        valid — entries reference live tree nodes, and the sealer adds
+        duplicate-chain counts additively — only the id association dies.
+        """
+        self._paths.clear()
+
     def drain_epoch(self) -> tuple[list[list], bool]:
         """Close the current epoch: ``(dirty entries, untracked_mutations)``.
 

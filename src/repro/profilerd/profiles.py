@@ -15,6 +15,7 @@ from __future__ import annotations
 import os
 
 TIMELINE_DIRNAME = "timeline"
+TARGETS_DIRNAME = "targets"  # multi-target daemon: per-target artifact dirs
 
 
 class ProfileLoadError(RuntimeError):
@@ -90,6 +91,35 @@ def profile_mtime(path: str) -> float:
         except OSError:
             pass
     return newest
+
+
+def list_profile_targets(path: str) -> list[str]:
+    """Target names under a multi-target daemon out dir (sorted; [] if none).
+
+    A target is any ``targets/<name>/`` subdir holding a ``tree.json`` or a
+    timeline ring — the shapes :func:`load_profile` can read.
+    """
+    from repro.core.snapshot import is_timeline_dir
+
+    d = os.path.join(path, TARGETS_DIRNAME)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for name in sorted(os.listdir(d)):
+        sub = os.path.join(d, name)
+        if not os.path.isdir(sub):
+            continue
+        if os.path.exists(os.path.join(sub, "tree.json")) or is_timeline_dir(
+            os.path.join(sub, TIMELINE_DIRNAME)
+        ):
+            out.append(name)
+    return out
+
+
+def target_profile_dir(path: str, name: str):
+    """The per-target profile dir behind a fleet out dir, or None."""
+    sub = os.path.join(path, TARGETS_DIRNAME, name)
+    return sub if name in list_profile_targets(path) else None
 
 
 def timeline_dir_of(path: str):

@@ -65,3 +65,12 @@ class SymbolResolver:
             stack = self.resolve_stack(frames)
             self._stack_cache[stack_id] = stack
         return stack
+
+    def reset_interned(self) -> None:
+        """Forget the per-``stack_id`` memo (NOT the per-frame cache).
+
+        A restarted writer re-assigns stack ids from 0 for what may be
+        entirely different stacks, so the id-keyed tier must not survive a
+        re-attach; the ``(filename, func)`` tier is content-keyed and stays.
+        """
+        self._stack_cache.clear()

@@ -51,68 +51,143 @@ from repro.core.export import (
 )
 from repro.core.report import ViewConfig, render_diff
 
-from .profiles import ProfileLoadError, load_profile, profile_mtime, timeline_dir_of
+from .profiles import (
+    ProfileLoadError,
+    list_profile_targets,
+    load_profile,
+    profile_mtime,
+    target_profile_dir,
+    timeline_dir_of,
+)
 
 DEFAULT_MAX_BYTES = 16 << 20  # bound any single response body
 MAX_TIMELINE_EPOCHS = 512  # newest epochs served; older ones need the ring
 
-ENDPOINTS = ("/status", "/tree", "/timeline", "/diff")
+ENDPOINTS = ("/status", "/targets", "/tree", "/timeline", "/diff")
 
 
 class SharedProfileState:
-    """Daemon -> server hand-off: the latest published status + tree copy.
+    """Daemon -> server hand-off: the latest published status + tree copies.
 
-    The daemon calls :meth:`update` once per publish window with a tree copy
-    it will never mutate again; handlers read the same objects concurrently
-    without copying.  The lock only ever guards attribute swaps.
+    The daemon calls :meth:`update` once per publish window with tree copies
+    it will never mutate again (the merged fleet tree plus one per target);
+    handlers read the same objects concurrently without copying.  The lock
+    only ever guards attribute swaps.
     """
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._status: dict = {}
         self._tree: Optional[CallTree] = None
+        self._targets: dict[str, CallTree] = {}
 
-    def update(self, status: dict, tree: Optional[CallTree] = None) -> None:
+    def update(
+        self,
+        status: dict,
+        tree: Optional[CallTree] = None,
+        targets: Optional[dict] = None,
+    ) -> None:
         with self._lock:
             self._status = status
             if tree is not None:
                 self._tree = tree
+            if targets is not None:
+                self._targets = dict(targets)
 
     def snapshot(self) -> tuple[dict, CallTree]:
         with self._lock:
             return self._status, (self._tree if self._tree is not None else CallTree())
 
+    def target_tree(self, name: str) -> Optional[CallTree]:
+        with self._lock:
+            return self._targets.get(name)
+
+    def target_names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._targets)
+
 
 class LiveSource:
     """Serve a running daemon through its :class:`SharedProfileState`."""
 
-    def __init__(self, shared: SharedProfileState, timeline_dir: Optional[str] = None, label: str = "live"):
+    def __init__(
+        self,
+        shared: SharedProfileState,
+        timeline_dir: Optional[str] = None,
+        label: str = "live",
+        target_timeline_dir_fn=None,
+    ):
         self.shared = shared
         self._timeline_dir = timeline_dir
+        self._target_timeline_dir_fn = target_timeline_dir_fn
         self.label = label
 
     def status(self) -> dict:
         status, _ = self.shared.snapshot()
         return status or {"live": True, "note": "daemon has not published yet"}
 
-    def tree(self) -> CallTree:
-        return self.shared.snapshot()[1]
+    def tree(self, target: Optional[str] = None) -> CallTree:
+        if target is None:
+            return self.shared.snapshot()[1]
+        t = self.shared.target_tree(target)
+        if t is not None:
+            return t
+        status, _ = self.shared.snapshot()
+        if target in (status.get("targets") or {}):
+            # Attached but no published sample window yet: an empty tree is
+            # the honest answer — /targets lists this name, so a 404 here
+            # would contradict the same server one request earlier.
+            return CallTree()
+        known = ", ".join(self.shared.target_names()) or "<none yet>"
+        raise ProfileLoadError(f"unknown target {target!r} (targets: {known})")
 
-    def timeline_dir(self) -> Optional[str]:
-        return self._timeline_dir
+    def targets(self) -> list[dict]:
+        status, _ = self.shared.snapshot()
+        rows = status.get("targets") or {}
+        return [{"name": name, **row} for name, row in sorted(rows.items())]
+
+    def timeline_dir(self, target: Optional[str] = None) -> Optional[str]:
+        if target is None:
+            return self._timeline_dir
+        if self._target_timeline_dir_fn is None:
+            return None
+        return self._target_timeline_dir_fn(target)
 
 
 class OfflineSource:
-    """Serve a profile artifact from disk (mtime-cached)."""
+    """Serve a profile artifact from disk (mtime-cached).
+
+    A multi-target daemon out dir also exposes its per-target profiles
+    (``targets/<name>/``) through ``tree(target=...)``/``targets()``, each
+    behind its own mtime cache.
+    """
 
     def __init__(self, profile_path: str, label: Optional[str] = None):
         self.path = profile_path
         self.label = label or profile_path
         self._cached: Optional[CallTree] = None
         self._cached_mtime = -1.0
+        self._target_sources: dict[str, "OfflineSource"] = {}
         self._lock = threading.Lock()
 
-    def tree(self) -> CallTree:
+    def _target_source(self, target: str) -> "OfflineSource":
+        with self._lock:
+            sub = self._target_sources.get(target)
+        if sub is None:
+            p = target_profile_dir(self.path, target)
+            if p is None:
+                known = ", ".join(list_profile_targets(self.path)) or "<none>"
+                raise ProfileLoadError(
+                    f"{self.path}: no target {target!r} (targets: {known})"
+                )
+            sub = OfflineSource(p, label=f"{self.label}[{target}]")
+            with self._lock:
+                sub = self._target_sources.setdefault(target, sub)
+        return sub
+
+    def tree(self, target: Optional[str] = None) -> CallTree:
+        if target is not None:
+            return self._target_source(target).tree()
         with self._lock:
             mtime = profile_mtime(self.path)
             if self._cached is None or mtime > self._cached_mtime:
@@ -120,8 +195,26 @@ class OfflineSource:
                 self._cached_mtime = mtime
             return self._cached
 
+    def targets(self) -> list[dict]:
+        rows = []
+        for name in list_profile_targets(self.path):
+            try:
+                t = self.tree(name)
+            except ProfileLoadError:
+                continue
+            rows.append(
+                {
+                    "name": name,
+                    "n_stacks": t.total(),
+                    "call_sites": t.node_count(),
+                    "depth": t.depth(),
+                }
+            )
+        return rows
+
     def status(self) -> dict:
         tree = self.tree()
+        targets = list_profile_targets(self.path)
         return {
             "offline": True,
             "profile": self.path,
@@ -129,13 +222,17 @@ class OfflineSource:
             "call_sites": tree.node_count(),
             "depth": tree.depth(),
             "timeline_dir": self.timeline_dir(),
+            "n_targets": len(targets),
+            "target_names": targets,
             "hot_paths": [
                 {"path": list(p), "share": round(s, 4)} for p, s in tree.hot_paths(k=10)
             ],
             "updated": profile_mtime(self.path),
         }
 
-    def timeline_dir(self) -> Optional[str]:
+    def timeline_dir(self, target: Optional[str] = None) -> Optional[str]:
+        if target is not None:
+            return self._target_source(target).timeline_dir()
         return timeline_dir_of(self.path)
 
 
@@ -168,6 +265,8 @@ class _Handler(BaseHTTPRequestHandler):
                 body, ctype = self._help(), "text/plain; charset=utf-8"
             elif url.path == "/status":
                 body, ctype = json.dumps(self.server.source.status(), indent=1), "application/json"
+            elif url.path == "/targets":
+                body, ctype = self._targets(), "application/json"
             elif url.path == "/tree":
                 body, ctype = self._tree(q)
             elif url.path == "/timeline":
@@ -208,11 +307,17 @@ class _Handler(BaseHTTPRequestHandler):
         return (
             "repro profilerd serve — endpoints:\n"
             "  /status                         live daemon status (or offline summary)\n"
-            "  /tree?fmt=csv|folded|speedscope|html|json&view=NAME\n"
+            "  /targets                        per-target status rows (multi-target daemon)\n"
+            "  /tree?fmt=csv|folded|speedscope|html|json&view=NAME&target=NAME\n"
             "       &metric=samples&root=SUBSTR&level=N&min_share=F\n"
-            "  /timeline?fmt=text|json&metric=samples\n"
+            "  /timeline?fmt=text|json&metric=samples&target=NAME\n"
             "  /diff?baseline=PATH&fmt=text|html&metric=samples\n"
         )
+
+    def _targets(self) -> str:
+        source = self.server.source
+        rows = source.targets() if hasattr(source, "targets") else []
+        return json.dumps({"targets": rows}, indent=1)
 
     def _baseline_tree(self, path: str) -> CallTree:
         """Baseline profiles get the same mtime cache as the served profile —
@@ -266,8 +371,11 @@ class _Handler(BaseHTTPRequestHandler):
         if fmt not in EXPORT_FORMATS:
             raise _HTTPError(400, f"unknown fmt {fmt!r}; choose from {', '.join(EXPORT_FORMATS)}")
         view = self._view_from_query(q)
-        tree = self.server.source.tree()
+        target = _one(q, "target")
+        tree = self.server.source.tree(target) if target else self.server.source.tree()
         label = self.server.source.label
+        if target:
+            label = f"{label} [{target}]"
         if fmt == "csv":
             # The CSV body carries its own marker rows; serve it as-is.
             return export_tree(tree, "csv", view=view, metric=_one(q, "metric"), title=label), CONTENT_TYPES["csv"]
@@ -304,7 +412,7 @@ class _Handler(BaseHTTPRequestHandler):
             return tuple(out)
 
         key = seg_key()
-        cached = getattr(self.server, "_timeline_cache", None)
+        cached = self.server._timeline_cache.get(tdir)
         if cached is not None and cached[0] == key:
             return cached[1]
         epochs = []
@@ -315,13 +423,20 @@ class _Handler(BaseHTTPRequestHandler):
                     epochs.pop(0)
         except SnapshotError as e:
             raise _HTTPError(500, f"timeline unreadable: {e}") from None
-        self.server._timeline_cache = (key, epochs)
+        if len(self.server._timeline_cache) >= 32:  # one entry per ring dir
+            self.server._timeline_cache.clear()
+        self.server._timeline_cache[tdir] = (key, epochs)
         return epochs
 
     def _timeline(self, q: dict) -> tuple[str, str]:
-        tdir = self.server.source.timeline_dir()
+        target = _one(q, "target")
+        tdir = self.server.source.timeline_dir(target) if target else self.server.source.timeline_dir()
         if tdir is None:
-            raise _HTTPError(404, "this profile has no timeline ring (daemon --epoch 0?)")
+            raise _HTTPError(
+                404,
+                "this profile has no timeline ring (daemon --epoch 0?)"
+                + (f" for target {target!r}" if target else ""),
+            )
         from repro.core.views_library import phase_table, timeline_table
 
         metric = _one(q, "metric", "samples")
@@ -412,7 +527,7 @@ class ProfileServer:
         self._httpd.baseline = baseline
         self._httpd.max_bytes = max_bytes
         self._httpd.verbose = verbose
-        self._httpd._timeline_cache = None
+        self._httpd._timeline_cache = {}
         self._httpd._baseline_sources = {}
         self._thread: Optional[threading.Thread] = None
 
@@ -468,14 +583,36 @@ def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
     else:
         state = "STALLED" if status.get("stalled") else ("done" if status.get("done") else "live")
         tl = status.get("timeline") or {}
+        who = (
+            f"targets={status.get('n_targets', 1)}"
+            if status.get("n_targets", 1) > 1 or status.get("watch")
+            else f"pid={status.get('pid', '?')}"
+        )
         head = (
-            f"profilerd top — {base_url}  pid={status.get('pid', '?')} [{state}] "
+            f"profilerd top — {base_url}  {who} [{state}] "
             f"wire=v{status.get('wire_version', '?')}\n"
             f"stacks={status.get('n_stacks', 0)} dropped={status.get('dropped_batches', 0)} "
             f"epochs={tl.get('epochs', 0)} call_sites={tl.get('call_sites', 0)} "
             f"windows={status.get('windows', 0)}"
         )
-    lines = [head, "", f"{'SHARE':>8}  HOTTEST PATHS"]
+    lines = [head]
+    targets = status.get("targets") or {}
+    if len(targets) > 1 or status.get("watch"):
+        lines += ["", f"{'TARGET':<18} {'STATE':<8} {'STACKS':>8} {'DROP':>5} "
+                      f"{'BACKLOG':>8} {'RESTARTS':>8}  PID"]
+        for name, row in sorted(targets.items()):
+            tstate = (
+                "STALLED" if row.get("stalled")
+                else "done" if row.get("done")
+                else "live" if row.get("alive")
+                else "dead"
+            )
+            lines.append(
+                f"{name:<18.18} {tstate:<8} {row.get('n_stacks', 0):>8} "
+                f"{row.get('dropped_batches', 0):>5} {row.get('backlog_bytes', 0):>8} "
+                f"{row.get('restarts', 0):>8}  {row.get('pid', '?')}"
+            )
+    lines += ["", f"{'SHARE':>8}  HOTTEST PATHS"]
     for hp in status.get("hot_paths", [])[:k]:
         lines.append(f"{hp['share']:8.2%}  {'/'.join(hp['path'])}")
     if not status.get("hot_paths"):

@@ -1,0 +1,404 @@
+"""Multi-source ingest plane: one daemon draining a fleet of spools.
+
+The paper's design point is a *single* external profiler observing the whole
+simulated system; this module is the fan-in that makes one daemon process
+scale to N targets.  Two pieces:
+
+* :class:`SpoolSource` — everything one attached target owns: spool reader,
+  streaming decoder, symbol resolver, :class:`~repro.profilerd.ingest.TreeIngestor`
+  (so the O(depth) single-target fast path is untouched — dispatch between
+  sources happens per *chunk*, never per sample), per-target dominance/trend
+  detectors, an optional per-target timeline ring, stall bookkeeping, and
+  crash-and-restart re-attach (a restarted writer recreates the spool file;
+  the old mmap is drained dry, then the reader/decoder and every
+  ``stack_id``-keyed cache are rebuilt against the new incarnation).
+* :class:`SpoolSet`  — attach/discovery plus fair draining: explicit paths
+  attach as they appear, a ``--watch`` directory is rescanned every drain
+  pass so spools created *after* the daemon started are picked up within one
+  drain interval, and :meth:`SpoolSet.drain_all` cycles the sources
+  round-robin in bounded (1 MiB) chunks so one backlogged target cannot
+  starve the others.
+
+The daemon (:mod:`repro.profilerd.daemon`) composes these into per-target
+trees plus a continuously merged fleet tree, publishes both to the query
+plane, and epoch-seals per-target rings merged at seal time.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import os
+import time
+from collections import deque
+from typing import Callable, Optional, Sequence
+
+from repro.core.calltree import CallTree
+from repro.core.detector import DominanceDetector, Rule, TrendDetector, TrendRule
+from repro.core.snapshot import CountSealer, EpochMeta, TimelineWriter
+
+from .ingest import TreeIngestor
+from .resolver import SymbolResolver
+from .spool import SpoolError, SpoolReader
+from .wire import Bye, Decoder, Hello, RawSample, Rusage
+
+STALLED = "TARGET_STALLED"
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def source_name_for(path: str) -> str:
+    """Default target name: the spool's basename minus its extension."""
+    base = os.path.basename(path)
+    if base.endswith(".spool"):
+        base = base[: -len(".spool")]
+    return base or "target"
+
+
+class SpoolSource:
+    """One attached target: reader -> decoder -> resolver -> ingestor -> tree."""
+
+    def __init__(
+        self,
+        name: str,
+        path: str,
+        *,
+        reader: Optional[SpoolReader] = None,
+        collapse_origins: Sequence[str] = (),
+        rules: Optional[Sequence[Rule]] = None,
+        trend_rule: Optional[TrendRule] = None,
+        timeline_dir: Optional[str] = None,
+        epochs_per_segment: int = 16,
+        max_segments: int = 64,
+        timeline_cap: int = 2048,
+    ):
+        self.name = name
+        self.path = path
+        self.reader = reader if reader is not None else SpoolReader(path)
+        self.decoder = Decoder()
+        self.resolver = SymbolResolver(collapse_origins)
+        self.ingestor = TreeIngestor(resolver=self.resolver)
+        self.tree = self.ingestor.tree
+        self.detector = DominanceDetector(list(rules) if rules else [Rule()])
+        self.timeline_writer: Optional[TimelineWriter] = None
+        self.sealer: Optional[CountSealer] = None
+        self.trend: Optional[TrendDetector] = None
+        if timeline_dir is not None:
+            self.timeline_writer = TimelineWriter(
+                timeline_dir,
+                epochs_per_segment=epochs_per_segment,
+                max_segments=max_segments,
+            )
+            self.sealer = CountSealer(self.tree, self.timeline_writer)
+            self.trend = TrendDetector(trend_rule)
+        self.timeline: deque = deque(maxlen=timeline_cap)  # (t, depth)
+        self.rusage: deque = deque(maxlen=timeline_cap)
+        self.target_pid = self.reader.writer_pid
+        self.period_s = 0.0
+        self.wire_version = 0  # from HELLO; 0 until the target announced
+        self.n_stacks = 0
+        self.n_ticks_reported = 0
+        self.bye_seen = False
+        self.stalled = False
+        self.restarts = 0
+        self.drained_bytes = 0
+        self.backlog_bytes = 0
+        self.samples_since_publish = 0
+        # The last published immutable tree copy (query-plane handoff).
+        self.last_snapshot: Optional[CallTree] = None
+        self.attached_wall = time.monotonic()
+        self._last_sample_wall: Optional[float] = None
+        # Re-attach carries these across decoder/reader incarnations.
+        self._unknown_refs_base = 0
+        self._degraded_defs_base = 0
+        self._dropped_base = 0
+
+    # -- aggregate counters --------------------------------------------------
+
+    @property
+    def alive(self) -> bool:
+        return _pid_alive(self.target_pid)
+
+    @property
+    def dropped_batches(self) -> int:
+        if self.reader is None:  # closed: the base holds the final count
+            return self._dropped_base
+        return self._dropped_base + self.reader.dropped
+
+    @property
+    def unknown_stack_refs(self) -> int:
+        return self._unknown_refs_base + self.decoder.unknown_stack_refs
+
+    @property
+    def degraded_stackdefs(self) -> int:
+        return self._degraded_defs_base + self.decoder.degraded_stackdefs
+
+    # -- ingest --------------------------------------------------------------
+
+    def _apply(self, ev) -> None:
+        if isinstance(ev, RawSample):
+            depth = self.ingestor.ingest(ev)
+            self.timeline.append((ev.t, depth))
+            self.n_stacks += 1
+            self.samples_since_publish += 1
+            self._last_sample_wall = time.monotonic()
+            self.stalled = False
+        elif isinstance(ev, Hello):
+            self.target_pid = ev.pid
+            self.period_s = ev.period_s
+            self.wire_version = ev.version
+        elif isinstance(ev, Rusage):
+            self.rusage.append((ev.t, ev.cpu_s, ev.rss_bytes))
+        elif isinstance(ev, Bye):
+            self.bye_seen = True
+            self.n_ticks_reported += ev.n_ticks
+
+    def drain_chunk(self) -> int:
+        """One bounded read (1 MiB cap) decoded and ingested; returns bytes.
+
+        The cap is the fairness unit: :meth:`SpoolSet.drain_all` interleaves
+        chunks across sources, so a minutes-deep backlog on one target
+        streams through without starving the rest.
+        """
+        chunk = self.reader.read()
+        if chunk:
+            for ev in self.decoder.feed(chunk):
+                self._apply(ev)
+            self.drained_bytes += len(chunk)
+        self.backlog_bytes = self.reader.backlog
+        # The writer sets the header flag even when the BYE *record* was
+        # dropped on a full spool; honor it so a cleanly stopped target is
+        # never mistaken for a stalled one.
+        if self.reader.bye_seen:
+            self.bye_seen = True
+        return len(chunk)
+
+    def maybe_reattach(self) -> bool:
+        """Re-attach to a recreated spool (writer crash-and-restart).
+
+        The old incarnation's mmap outlives the rename, so it is drained dry
+        first — nothing the dead writer committed is lost.  Then the reader
+        and decoder are rebuilt and every ``stack_id``-keyed cache is reset
+        (a restarted writer re-assigns ids from 0 for different stacks), the
+        pid/stall/bye state flips back to live, and counters carry over.  A
+        half-created replacement (``SpoolError``) is retried next pass.
+        """
+        if not self.reader.replaced():
+            return False
+        try:
+            fresh = SpoolReader(self.path)
+        except SpoolError:
+            return False
+        while self.drain_chunk():
+            pass
+        self._unknown_refs_base += self.decoder.unknown_stack_refs
+        self._degraded_defs_base += self.decoder.degraded_stackdefs
+        self._dropped_base += self.reader.dropped
+        self.reader.close()
+        self.reader = fresh
+        self.decoder = Decoder()
+        self.resolver.reset_interned()
+        self.ingestor.reset_chain_cache()
+        self.target_pid = fresh.writer_pid
+        self.period_s = 0.0  # until the new HELLO arrives
+        self.bye_seen = False  # a stale bye=1 belongs to the dead incarnation
+        self.stalled = False
+        self.backlog_bytes = fresh.backlog
+        self._last_sample_wall = time.monotonic()
+        self.restarts += 1
+        return True
+
+    # -- analysis ------------------------------------------------------------
+
+    def check_stall(self, stall_timeout_s: float) -> Optional[dict]:
+        """Silence from a live target beyond the timeout -> a STALLED event."""
+        if self.bye_seen or self.stalled:
+            return None
+        ref = self._last_sample_wall
+        if ref is None:
+            ref = self.attached_wall  # attached but never saw a sample
+        silent = time.monotonic() - ref
+        # A slow-ticking but healthy target must not look stalled: silence is
+        # only suspicious once it clearly exceeds the publisher's own period.
+        timeout = max(stall_timeout_s, 3.0 * self.period_s)
+        if silent >= timeout and _pid_alive(self.target_pid):
+            self.stalled = True
+            return {
+                "kind": STALLED,
+                "target": self.name,
+                "path": [],
+                "share": 1.0,
+                "silent_s": round(silent, 3),
+                "pid": self.target_pid,
+                "wall_time": time.time(),
+            }
+        return None
+
+    def publish_window(self) -> Optional[CallTree]:
+        """Snapshot + run the dominance detector if samples arrived; returns
+        the new immutable tree copy (None on a quiet window)."""
+        if not self.samples_since_publish:
+            return None
+        snap = self.tree.copy()
+        self.last_snapshot = snap
+        self.detector.observe(snap)
+        self.samples_since_publish = 0
+        return snap
+
+    def seal_epoch(self, wall_time: float) -> tuple[Optional[EpochMeta], list]:
+        """Seal this target's epoch into its ring; returns (meta, verdicts)."""
+        if self.sealer is None:
+            return None, []
+        entries, untracked = self.ingestor.drain_epoch()
+        meta = self.sealer.seal(entries, wall_time=wall_time, untracked=untracked)
+        verdicts: list = []
+        if self.trend is not None:
+            # The trend window: rebuilt from the epoch's (chain, count) pairs —
+            # untracked mutations (v1 samples) are invisible here, which only
+            # softens detection for legacy spools, never ring correctness.
+            window = CallTree()
+            for e in entries:
+                if e[3] > 0:
+                    window.add_stack([n.name for n in e[0][1:]], {"samples": float(e[3])})
+            verdicts = self.trend.observe_epoch(
+                window, progress=meta.progress, epoch=meta.epoch, wall_time=meta.wall_time
+            )
+        return meta, verdicts
+
+    def status_row(self) -> dict:
+        return {
+            "path": self.path,
+            "pid": self.target_pid,
+            "alive": self.alive,
+            "stalled": self.stalled,
+            "done": self.bye_seen,
+            "period_s": self.period_s,
+            "wire_version": self.wire_version,
+            "n_stacks": self.n_stacks,
+            "n_ticks": self.n_ticks_reported,
+            "dropped_batches": self.dropped_batches,
+            "backlog_bytes": self.backlog_bytes,
+            "drained_bytes": self.drained_bytes,
+            "restarts": self.restarts,
+            "unknown_stack_refs": self.unknown_stack_refs,
+            "degraded_stackdefs": self.degraded_stackdefs,
+            "ingest": self.ingestor.stats(),
+        }
+
+    def close(self) -> None:
+        if self.timeline_writer is not None:
+            self.timeline_writer.close()
+        if self.reader is not None:
+            # Fold the reader-backed counters into the source so status()
+            # keeps working after the mmap is gone.
+            self._dropped_base += self.reader.dropped
+            if self.reader.bye_seen:
+                self.bye_seen = True
+            self.reader.close()
+            self.reader = None
+
+
+class SpoolSet:
+    """Attach and drain N spools: explicit paths plus ``--watch`` discovery.
+
+    ``make_source(name, path)`` is the daemon's factory — it builds the
+    :class:`SpoolSource` (per-target timeline dir, detector wiring, events)
+    and returns None on a transient attach failure, which keeps the path
+    pending for the next pass.
+    """
+
+    def __init__(
+        self,
+        *,
+        paths: Sequence[str] = (),
+        watch_dir: Optional[str] = None,
+        watch_glob: str = "*.spool",
+        make_source: Callable[[str, str], Optional[SpoolSource]],
+    ):
+        self.sources: dict[str, SpoolSource] = {}  # insertion order = rotation
+        self.watch_dir = watch_dir
+        self.watch_glob = watch_glob
+        self._make = make_source
+        self._pending: dict[str, None] = dict.fromkeys(paths)
+        self._attached_paths: set[str] = set()
+
+    def name_for(self, path: str) -> str:
+        name = source_name_for(path)
+        if name in self.sources:
+            i = 2
+            while f"{name}-{i}" in self.sources:
+                i += 1
+            name = f"{name}-{i}"
+        return name
+
+    def adopt(self, source: SpoolSource) -> SpoolSource:
+        """Register an externally-constructed source (solo blocking attach)."""
+        self.sources[source.name] = source
+        self._attached_paths.add(source.path)
+        self._pending.pop(source.path, None)
+        return source
+
+    @property
+    def all_explicit_attached(self) -> bool:
+        return not self._pending
+
+    def abandon_pending(self) -> list[str]:
+        """Give up on explicit paths that never attached; returns them.
+
+        The daemon calls this once the attach window closes, so a typo'd or
+        never-created ``--targets`` path cannot keep the run from exiting
+        after every real target finished."""
+        gone = list(self._pending)
+        self._pending.clear()
+        return gone
+
+    def discover(self) -> list[SpoolSource]:
+        """One attach pass: pending explicit paths + new watch-dir spools."""
+        candidates = list(self._pending)
+        if self.watch_dir is not None:
+            try:
+                entries = sorted(os.listdir(self.watch_dir))
+            except OSError:
+                entries = []
+            for e in entries:
+                if fnmatch.fnmatch(e, self.watch_glob):
+                    p = os.path.join(self.watch_dir, e)
+                    if p not in self._attached_paths and p not in self._pending:
+                        candidates.append(p)
+        fresh: list[SpoolSource] = []
+        for p in candidates:
+            if p in self._attached_paths or not os.path.exists(p):
+                continue
+            src = self._make(self.name_for(p), p)
+            if src is None:
+                continue  # transient (half-created / unreadable); retry later
+            fresh.append(self.adopt(src))
+        return fresh
+
+    def drain_all(self) -> int:
+        """Drain every source dry, round-robin in bounded chunks.
+
+        Each rotation reads at most one capped chunk per source; sources that
+        returned bytes stay in the rotation, so all backlogs shrink together
+        instead of head-of-line blocking on the deepest one.
+        """
+        total = 0
+        busy = list(self.sources.values())
+        while busy:
+            still = []
+            for s in busy:
+                n = s.drain_chunk()
+                total += n
+                if n:
+                    still.append(s)
+            busy = still
+        return total

@@ -140,25 +140,76 @@ class SpoolWriter:
         self._m.close()
 
 
-class SpoolReader:
-    """Daemon-side end: drain available bytes and advance ``tail``."""
+class _ShortHeader(SpoolError):
+    """File smaller than the spool header (possibly still being created)."""
 
-    def __init__(self, path: str):
+
+class SpoolReader:
+    """Daemon-side end: drain available bytes and advance ``tail``.
+
+    Attaching validates the whole header — magic, version, declared capacity
+    against the file size — and every failure mode (empty file, truncated
+    header, foreign file, mmap race) raises :class:`SpoolError` with a clean
+    message, never a raw ``struct.error``/``ValueError``/``OSError``.  A
+    short header gets one retry after ``header_retry_s``: a ``--watch``
+    discovery loop races freshly-created files, and the writer's
+    temp-then-rename protocol still leaves a brief window on filesystems
+    that surface renames before data (network mounts, some CI overlays).
+    """
+
+    def __init__(self, path: str, header_retry_s: float = 0.05):
         self.path = path
-        size = os.path.getsize(path)
+        try:
+            self._open(path)
+        except _ShortHeader:
+            time.sleep(header_retry_s)
+            self._open(path)
+
+    def _open(self, path: str) -> None:
+        try:
+            size = os.path.getsize(path)
+        except OSError as e:
+            raise SpoolError(f"{path}: cannot stat spool: {e}") from None
         if size < HEADER_SIZE:
-            raise SpoolError(f"{path}: truncated spool header")
-        self._m = _Mapped(path, size, create=False)
-        mm = self._m.mm
-        if bytes(mm[_OFF_MAGIC : _OFF_MAGIC + 4]) != MAGIC:
-            raise SpoolError(f"{path}: bad spool magic")
-        (version,) = _U32.unpack_from(mm, _OFF_VERSION)
-        if version != SPOOL_VERSION:
-            raise SpoolError(f"{path}: spool version {version} != {SPOOL_VERSION}")
-        self.capacity = self._m.get_u64(_OFF_CAPACITY)
-        if size < HEADER_SIZE + self.capacity:
-            raise SpoolError(f"{path}: file smaller than declared capacity")
-        self._tail = self._m.get_u64(_OFF_TAIL)
+            raise _ShortHeader(
+                f"{path}: truncated spool header ({size} < {HEADER_SIZE} bytes)"
+            )
+        try:
+            m = _Mapped(path, size, create=False)
+        except (OSError, ValueError) as e:
+            raise SpoolError(f"{path}: cannot map spool: {e}") from None
+        ok = False
+        try:
+            mm = m.mm
+            if bytes(mm[_OFF_MAGIC : _OFF_MAGIC + 4]) != MAGIC:
+                raise SpoolError(f"{path}: bad spool magic (not a spool file?)")
+            try:
+                (version,) = _U32.unpack_from(mm, _OFF_VERSION)
+                capacity = m.get_u64(_OFF_CAPACITY)
+                tail = m.get_u64(_OFF_TAIL)
+            except struct.error as e:
+                raise SpoolError(f"{path}: unreadable spool header: {e}") from None
+            if version != SPOOL_VERSION:
+                raise SpoolError(f"{path}: spool version {version} != {SPOOL_VERSION}")
+            if capacity <= 0:
+                raise SpoolError(f"{path}: declared capacity {capacity} is not positive")
+            if size < HEADER_SIZE + capacity:
+                raise SpoolError(
+                    f"{path}: file size {size} smaller than declared capacity "
+                    f"{capacity} + header"
+                )
+            st = os.fstat(m._fd)
+            ok = True
+        finally:
+            if not ok:
+                m.close()
+        self._m = m
+        self.capacity = capacity
+        self._tail = tail
+        # Identity of the mapped file: a crashed-and-restarted writer
+        # recreates the spool via temp+rename, so the path pointing at a
+        # different inode is the re-attach signal (see replaced()).
+        self.file_id = (st.st_dev, st.st_ino)
 
     @classmethod
     def wait_for(cls, path: str, timeout_s: float = 30.0, poll_s: float = 0.05) -> "SpoolReader":
@@ -184,6 +235,26 @@ class SpoolReader:
     @property
     def bye_seen(self) -> bool:
         return self._m.get_u64(_OFF_BYE) == 1
+
+    @property
+    def backlog(self) -> int:
+        """Bytes written but not yet drained (backpressure accounting)."""
+        return self._m.get_u64(_OFF_HEAD) - self._tail
+
+    def replaced(self) -> bool:
+        """True when ``path`` now names a different file than the one mapped.
+
+        A target that crashed and restarted recreates its spool under the
+        same path (temp+rename), leaving this reader mapped to the unlinked
+        old inode — which stays drainable, so callers drain it dry and then
+        attach a fresh reader to the new incarnation.  A deleted (not
+        replaced) spool returns False: there is nothing new to attach to.
+        """
+        try:
+            st = os.stat(self.path)
+        except OSError:
+            return False
+        return (st.st_dev, st.st_ino) != self.file_id
 
     def read(self, max_bytes: Optional[int] = DEFAULT_READ_CAP) -> bytes:
         """Drain up to ``max_bytes`` (``None`` = everything available)."""

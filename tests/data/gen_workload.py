@@ -8,11 +8,17 @@ the result against the committed baseline snapshot ``ci_baseline.snap``;
 ``--inject-hot-loop`` adds a synthetic regression (a spin stack stealing a
 third of the samples) that the gate must reject.
 
+``--spool`` writes the same deterministic workload as a wire-v2 *spool file*
+(HELLO + interned sample ticks + BYE) instead of sealed artifacts — the shape
+a multi-target ``profilerd attach --targets a.spool,b.spool`` drains, so CI
+can exercise one daemon over several generated targets.
+
 Usage::
 
   python tests/data/gen_workload.py --out /tmp/gate          # profile + timeline
   python tests/data/gen_workload.py --out /tmp/bad --inject-hot-loop
   python tests/data/gen_workload.py --snapshot tests/data/ci_baseline.snap
+  python tests/data/gen_workload.py --spool /tmp/a.spool     # raw spool target
 """
 
 from __future__ import annotations
@@ -73,15 +79,58 @@ def build(out_dir: str | None, inject_hot_loop: bool = False) -> CallTree:
     return tree
 
 
+def write_spool(path: str, inject_hot_loop: bool = False, ticks: int = 60) -> int:
+    """Emit the workload as a finished wire-v2 spool (HELLO..samples..BYE).
+
+    Weighted stacks become ``weight`` unit samples per tick, so the drained
+    tree carries the same shape as :func:`build` — deterministically (fixed
+    tids, fixed timestamps).  Returns the number of samples committed.
+    """
+    from repro.profilerd.spool import SpoolWriter
+    from repro.profilerd.wire import Encoder, RawFrame, RawSample
+
+    workload = list(WORKLOAD)
+    if inject_hot_loop:
+        workload.append(HOT_LOOP)
+    threads = sorted({stack[0] for stack, _ in workload})
+    writer = SpoolWriter(path)
+    enc = Encoder()
+    writer.write(enc.encode_hello(os.getpid(), 0.01))
+    n = 0
+    for tick in range(ticks):
+        samples = []
+        for stack, weight in workload:
+            thread = stack[0].split("::", 1)[1]
+            tid = 1000 + threads.index(stack[0])
+            frames = [RawFrame(f"/synthetic/{s}.py", s, 1) for s in stack[1:]]
+            for _ in range(weight):
+                samples.append(RawSample(tick * 0.01, tid, thread, frames))
+        payload, fresh = enc.encode_tick(samples)
+        if writer.write(payload):
+            n += len(samples)
+        else:
+            enc.rollback(fresh)
+    writer.write_bye(enc.encode_bye(ticks))
+    writer.close()
+    return n
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=None, help="write tree.json + timeline/ here")
     ap.add_argument("--snapshot", default=None, help="also save a .snap of the final tree")
+    ap.add_argument("--spool", default=None,
+                    help="write the workload as a raw wire-v2 spool file here")
     ap.add_argument("--inject-hot-loop", action="store_true",
                     help="add a synthetic regression (spin stack)")
     args = ap.parse_args(argv)
+    if args.out is None and args.snapshot is None and args.spool is None:
+        ap.error("need --out, --snapshot and/or --spool")
+    if args.spool:
+        n = write_spool(args.spool, args.inject_hot_loop)
+        print(f"spool: {args.spool} ({n} samples committed)")
     if args.out is None and args.snapshot is None:
-        ap.error("need --out and/or --snapshot")
+        return 0
     tree = build(args.out, args.inject_hot_loop)
     if args.snapshot:
         save_snapshot(tree, args.snapshot)

@@ -17,10 +17,13 @@ The invariants the ISSUE pins down:
 
 import json
 import os
+import struct
 import subprocess
 import sys
 import threading
 import time
+import urllib.error
+import urllib.request
 
 import pytest
 
@@ -36,7 +39,7 @@ from repro.profilerd.agent import Agent, DaemonBackend
 from repro.profilerd.daemon import STALLED, DaemonConfig, ProfilerDaemon
 from repro.profilerd.ingest import TreeIngestor
 from repro.profilerd.resolver import SymbolResolver
-from repro.profilerd.spool import SpoolReader, SpoolWriter
+from repro.profilerd.spool import HEADER_SIZE, SpoolError, SpoolReader, SpoolWriter
 from repro.profilerd.wire import (
     WIRE_VERSION,
     Bye,
@@ -48,6 +51,80 @@ from repro.profilerd.wire import (
 )
 
 SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def wait_until(pred, timeout_s=10.0, interval_s=0.01, desc="condition"):
+    """Deadline-poll ``pred`` instead of sleeping a guessed duration.
+
+    The CI matrix runs on noisy shared runners where a fixed sleep is either
+    wastefully long or flakily short; every lifecycle test waits on the
+    actual state transition and fails with a description on timeout.
+    """
+    deadline = time.monotonic() + timeout_s
+    while True:
+        value = pred()
+        if value:
+            return value
+        if time.monotonic() >= deadline:
+            raise AssertionError(f"timed out after {timeout_s:g}s waiting for {desc}")
+        time.sleep(interval_s)
+
+
+def _thread_stack_funcs(thread) -> list:
+    frame = sys._current_frames().get(thread.ident)
+    out = []
+    while frame is not None:
+        out.append(frame.f_code.co_name)
+        frame = frame.f_back
+    return out
+
+
+def _http_get(url: str) -> tuple[int, str]:
+    try:
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            return resp.status, resp.read().decode("utf-8")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode("utf-8")
+
+
+class FakeTarget:
+    """Deterministic spool publisher with full control over bye/crash/restart.
+
+    Unlike :class:`Agent` (which samples this test process's real threads),
+    every stack is chosen by the test, so two fake targets are genuinely
+    distinct and re-attach/fleet-merge assertions can be exact.
+    """
+
+    def __init__(self, path, leaf: str, pid: int = 0, capacity: int = 1 << 20):
+        self.path = str(path)
+        self.leaf = leaf
+        self.writer = SpoolWriter(self.path, capacity=capacity)
+        self.enc = Encoder()
+        self.n = 0
+        self.writer.write(self.enc.encode_hello(pid or os.getpid(), 0.01))
+
+    def emit(self, k: int = 1, leaf=None):
+        frames = [
+            RawFrame("/fake/app.py", "main", 1),
+            RawFrame("/fake/app.py", leaf or self.leaf, 2),
+        ]
+        for _ in range(k):
+            payload, fresh = self.enc.encode_tick(
+                [RawSample(self.n * 0.01, 1, "w", frames)]
+            )
+            if self.writer.write(payload):
+                self.n += 1
+            else:
+                self.enc.rollback(fresh)
+        return self
+
+    def bye(self):
+        self.writer.write_bye(self.enc.encode_bye(self.n))
+        self.writer.close()
+
+    def crash(self):
+        """Disappear without a BYE (the writer process died)."""
+        self.writer.close()
 
 
 def parked_worker(depth_a_evt):
@@ -70,7 +147,10 @@ def parked():
     evt = threading.Event()
     t = threading.Thread(target=parked_worker, args=(evt,), name="parked-worker", daemon=True)
     t.start()
-    time.sleep(0.05)  # let it reach the wait
+    wait_until(
+        lambda: "parked_level_three" in _thread_stack_funcs(t),
+        desc="parked worker reaching its wait()",
+    )
     yield t
     evt.set()
     t.join(timeout=5)
@@ -531,19 +611,104 @@ class TestSpool:
 
     def test_reader_waits_for_writer(self, tmp_path):
         p = str(tmp_path / "late.spool")
+        created = threading.Event()
 
         def create_late():
-            time.sleep(0.2)
+            created.wait()
             SpoolWriter(p, capacity=256).write(b"x")
 
         threading.Thread(target=create_late, daemon=True).start()
+        created.set()
         r = SpoolReader.wait_for(p, timeout_s=5)
-        deadline = time.monotonic() + 5
-        data = b""
-        while not data and time.monotonic() < deadline:
-            data = r.read()
-            time.sleep(0.01)
-        assert data == b"x"
+        assert wait_until(r.read, desc="late writer's bytes") == b"x"
+
+
+class TestSpoolAttachHardening:
+    """Every corrupt-attach mode must raise SpoolError with a clean message,
+    never a raw struct.error/ValueError/OSError (multi-target --watch races
+    half-created and foreign files as a matter of course)."""
+
+    def _header(self, magic=b"RPSP", version=1, capacity=64):
+        hdr = bytearray(HEADER_SIZE)
+        hdr[0:4] = magic
+        struct.pack_into("<I", hdr, 4, version)
+        struct.pack_into("<Q", hdr, 8, capacity)
+        return bytes(hdr)
+
+    def _attach(self, path):
+        return SpoolReader(str(path), header_retry_s=0.01)
+
+    def test_zero_length_file(self, tmp_path):
+        p = tmp_path / "z.spool"
+        p.write_bytes(b"")
+        with pytest.raises(SpoolError, match="truncated spool header"):
+            self._attach(p)
+
+    def test_truncated_header(self, tmp_path):
+        p = tmp_path / "t.spool"
+        p.write_bytes(b"RPSP\x01")
+        with pytest.raises(SpoolError, match="truncated spool header"):
+            self._attach(p)
+
+    def test_garbage_file(self, tmp_path):
+        p = tmp_path / "g.spool"
+        p.write_bytes(b"\xde\xad\xbe\xef" * 64)
+        with pytest.raises(SpoolError, match="bad spool magic"):
+            self._attach(p)
+
+    def test_version_skew(self, tmp_path):
+        p = tmp_path / "v.spool"
+        p.write_bytes(self._header(version=99) + b"\x00" * 64)
+        with pytest.raises(SpoolError, match="version 99"):
+            self._attach(p)
+
+    def test_capacity_beyond_file_size(self, tmp_path):
+        """A spool truncated mid-copy declares more capacity than it holds."""
+        p = tmp_path / "c.spool"
+        p.write_bytes(self._header(capacity=1 << 20) + b"\x00" * 16)
+        with pytest.raises(SpoolError, match="smaller than declared capacity"):
+            self._attach(p)
+
+    def test_zero_capacity(self, tmp_path):
+        """capacity=0 used to survive the header checks and die later with a
+        ZeroDivisionError in read(); it must be rejected at attach."""
+        p = tmp_path / "0.spool"
+        p.write_bytes(self._header(capacity=0))
+        with pytest.raises(SpoolError, match="capacity 0 is not positive"):
+            self._attach(p)
+
+    def test_short_header_retries_once_and_wins(self, tmp_path):
+        """The --watch race: a short file that becomes a real spool between
+        the first and second open attaches cleanly."""
+        p = tmp_path / "race.spool"
+        p.write_bytes(b"RP")  # half-created
+        grown = threading.Event()
+
+        def grow():
+            w = SpoolWriter(str(p), capacity=128)  # temp+rename over the stub
+            w.write(b"ok")
+            w.close()
+            grown.set()
+
+        threading.Thread(target=grow, daemon=True).start()
+        grown.wait(timeout=5)
+        r = SpoolReader(str(p), header_retry_s=0.5)
+        assert r.read() == b"ok"
+
+    def test_replaced_detects_new_incarnation(self, tmp_path):
+        p = tmp_path / "r.spool"
+        w1 = SpoolWriter(str(p), capacity=128)
+        w1.write(b"first")
+        r = SpoolReader(str(p))
+        assert not r.replaced()
+        w1.close()
+        w2 = SpoolWriter(str(p), capacity=128)  # restart: temp+rename
+        w2.write(b"second")
+        assert r.replaced()
+        assert r.read() == b"first"  # the unlinked mmap drains dry
+        r2 = SpoolReader(str(p))
+        assert r2.read() == b"second"
+        w2.close()
 
 
 class TestDaemonLifecycle:
@@ -688,6 +853,327 @@ class TestBackendParity:
         assert isinstance(s, DaemonBackend)
         assert s.spool_path == spool and s.spawn_daemon is False
         assert s.config.period_s == 0.123
+
+
+class TestIngestorOverflowSealing:
+    """ISSUE 5 satellite: the chain-cache overflow fallback mutates the tree
+    outside the cache, so it must flip the `untracked` epoch flag exactly
+    like the v1 path — otherwise sealed K_COUNTS records silently drop that
+    mass from the timeline."""
+
+    def _feed(self, enc, dec, ing, frames):
+        payload, _ = enc.encode_tick([RawSample(0.0, 1, "t", frames)])
+        for ev in dec.feed(payload):
+            ing.ingest(ev)
+
+    def test_overflow_mid_epoch_forces_sealer_keyframe(self, tmp_path):
+        from repro.core.snapshot import K_FULL, CountSealer, TimelineReader, TimelineWriter
+
+        enc, dec = Encoder(), Decoder()
+        ing = TreeIngestor(max_paths=1)
+        writer = TimelineWriter(str(tmp_path / "tl"))
+        sealer = CountSealer(ing.tree, writer)
+        stack_a = [RawFrame("/a.py", "root", 1), RawFrame("/a.py", "hot", 2)]
+        stack_b = [RawFrame("/a.py", "root", 1), RawFrame("/b.py", "cold", 3)]
+
+        # Epoch 0: one stack, fits the 1-entry cache; normal counts path.
+        self._feed(enc, dec, ing, stack_a)
+        entries, untracked = ing.drain_epoch()
+        assert not untracked
+        sealer.seal(entries, wall_time=0.0, untracked=untracked)
+
+        # Epoch 1: repeats ride the cache, then a second unique stack
+        # overflows it mid-epoch -> the epoch must be untracked and the
+        # sealer must keyframe (a counts record cannot carry stack_b).
+        self._feed(enc, dec, ing, stack_a)
+        self._feed(enc, dec, ing, stack_b)
+        self._feed(enc, dec, ing, stack_b)
+        entries, untracked = ing.drain_epoch()
+        assert untracked, "cache overflow must mark the epoch untracked"
+        meta = sealer.seal(entries, wall_time=1.0, untracked=untracked)
+        assert meta.kind == K_FULL
+
+        # Overflowed stacks can never be counted, so later epochs that touch
+        # them keyframe too — the mass keeps reaching the ring.
+        self._feed(enc, dec, ing, stack_b)
+        entries, untracked = ing.drain_epoch()
+        assert untracked
+        sealer.seal(entries, wall_time=2.0, untracked=untracked)
+        writer.close()
+
+        last = TimelineReader(str(tmp_path / "tl")).last()
+        assert last is not None
+        assert last[1].root == ing.tree.root  # nothing silently dropped
+        assert last[1].total() == 5.0
+
+
+class TestWriterRestartReattach:
+    """ISSUE 5 satellite: a crashed-and-restarted target recreates its spool
+    (same path, new inode, fresh stack-id space, possibly stale bye=1 or a
+    reused pid).  The daemon must re-attach instead of reporting a phantom
+    TARGET_STALLED, and both incarnations' samples must land in the tree."""
+
+    def _daemon(self, tmp_path, **kw):
+        kw.setdefault("out_dir", str(tmp_path / "out"))
+        kw.setdefault("publish_interval_s", 0.05)
+        kw.setdefault("drain_interval_s", 0.01)
+        kw.setdefault("epoch_s", 0.2)
+        kw.setdefault("stall_timeout_s", 60.0)  # a restart must beat a stall
+        kw.setdefault("max_seconds", 30.0)
+        return ProfilerDaemon(DaemonConfig(**kw))
+
+    def test_kill_and_respawn_reattaches_without_phantom_stall(self, tmp_path):
+        spool = tmp_path / "job.spool"
+        # Incarnation 1 crashes: samples, no BYE, and the recorded pid (this
+        # test process) stays alive — the pid-reuse shape that used to read
+        # as a stall.
+        FakeTarget(spool, "first_incarnation").emit(4).crash()
+        daemon = self._daemon(tmp_path, spool_paths=(str(spool),))
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        wait_until(lambda: daemon.n_stacks >= 4, desc="first incarnation drained")
+        # Respawn under the same path; clean BYE ends the run.
+        FakeTarget(spool, "second_incarnation").emit(3).bye()
+        th.join(timeout=20)
+        assert not th.is_alive()
+        assert daemon.n_stacks == 7
+        (src,) = daemon.sources
+        assert src.restarts == 1
+        kinds = [e["kind"] for e in daemon.events]
+        assert "TARGET_RESTARTED" in kinds
+        assert STALLED not in kinds, "restart must not read as a stall"
+        flat = daemon.tree.flatten()
+        assert any("first_incarnation" in k for k in flat)
+        assert any("second_incarnation" in k for k in flat)
+
+    def test_stale_bye_clears_on_restart(self, tmp_path):
+        """A cleanly-stopped target (bye=1) that restarts must flip back to
+        live: the stale header flag belongs to the dead incarnation."""
+        watch = tmp_path / "spools"
+        watch.mkdir()
+        FakeTarget(watch / "job.spool", "gen_one").emit(2).bye()
+        daemon = self._daemon(tmp_path, watch_dir=str(watch))
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        wait_until(
+            lambda: daemon.sources and daemon.sources[0].bye_seen,
+            desc="first incarnation drained to BYE",
+        )
+        FakeTarget(watch / "job.spool", "gen_two").emit(5)  # restart, no bye
+        wait_until(lambda: daemon.n_stacks == 7, desc="second incarnation drained")
+        (src,) = daemon.sources
+        assert src.bye_seen is False and src.restarts == 1
+        daemon.request_stop()
+        th.join(timeout=20)
+        assert not th.is_alive()
+        assert STALLED not in [e["kind"] for e in daemon.events]
+        assert daemon.tree.total() == 7
+
+
+class TestMultiTargetDaemon:
+    """The tentpole: one daemon, N spools -> per-target trees + merged fleet."""
+
+    def _cfg(self, tmp_path, **kw):
+        kw.setdefault("out_dir", str(tmp_path / "fleet.out"))
+        kw.setdefault("publish_interval_s", 0.05)
+        kw.setdefault("drain_interval_s", 0.01)
+        kw.setdefault("epoch_s", 0.2)
+        kw.setdefault("max_seconds", 30.0)
+        return DaemonConfig(**kw)
+
+    def test_two_live_targets_served_and_merged(self, tmp_path):
+        """Acceptance: one daemon over >= 2 concurrently-running targets
+        serves distinct /tree?target= views plus a fleet tree whose inclusive
+        mass equals the sum of the per-target trees."""
+        alpha = FakeTarget(tmp_path / "alpha.spool", "alpha_leaf").emit(6)
+        beta = FakeTarget(tmp_path / "beta.spool", "beta_leaf").emit(4)
+        cfg = self._cfg(
+            tmp_path,
+            spool_paths=(str(tmp_path / "alpha.spool"), str(tmp_path / "beta.spool")),
+            serve_port=0,
+        )
+        daemon = ProfilerDaemon(cfg)
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        try:
+            wait_until(lambda: daemon.server is not None, desc="query plane up")
+            url = daemon.server.url
+
+            def targets_published():
+                _code, body = _http_get(url + "/targets")
+                rows = {r["name"]: r for r in json.loads(body)["targets"]}
+                return rows if {"alpha", "beta"} <= set(rows) else None
+
+            rows = wait_until(targets_published, desc="both targets published")
+            assert rows["alpha"]["n_stacks"] == 6 and rows["beta"]["n_stacks"] == 4
+            assert rows["alpha"]["done"] is False and rows["alpha"]["alive"] is True
+
+            from repro.core.export import from_folded
+
+            _c, alpha_folded = _http_get(url + "/tree?target=alpha&fmt=folded")
+            assert "alpha_leaf" in alpha_folded and "beta_leaf" not in alpha_folded
+            _c, beta_folded = _http_get(url + "/tree?target=beta&fmt=folded")
+            assert "beta_leaf" in beta_folded and "alpha_leaf" not in beta_folded
+            _c, fleet_folded = _http_get(url + "/tree?fmt=folded")
+            fleet = from_folded(fleet_folded)
+            per_target_sum = from_folded(alpha_folded).total() + from_folded(beta_folded).total()
+            assert fleet.total() == pytest.approx(per_target_sum) == pytest.approx(10.0)
+            code, body = _http_get(url + "/tree?target=nope&fmt=folded")
+            assert code == 404 and "unknown target" in body
+        finally:
+            alpha.bye()
+            beta.bye()
+            th.join(timeout=20)
+        assert not th.is_alive()
+        assert daemon.bye_seen
+
+        # On-disk layout: fleet tree + per-target artifacts + sealed rings.
+        from repro.core.snapshot import TimelineReader
+        from repro.profilerd.profiles import list_profile_targets, load_profile
+
+        out = cfg.resolved_out_dir()
+        assert load_profile(out).total() == 10.0
+        assert list_profile_targets(out) == ["alpha", "beta"]
+        assert load_profile(os.path.join(out, "targets", "alpha")).total() == 6.0
+        fleet_last = TimelineReader(os.path.join(out, "timeline")).last()
+        assert fleet_last is not None and fleet_last[1].total() == 10.0
+        alpha_last = TimelineReader(
+            os.path.join(out, "targets", "alpha", "timeline")
+        ).last()
+        assert alpha_last is not None and alpha_last[1].total() == 6.0
+        status = json.load(open(os.path.join(out, "status.json")))
+        assert status["n_targets"] == 2 and set(status["targets"]) == {"alpha", "beta"}
+
+    def test_offline_fleet_dir_serves_targets(self, tmp_path):
+        from repro.profilerd.server import OfflineSource, ProfileServer
+
+        FakeTarget(tmp_path / "alpha.spool", "alpha_leaf").emit(6).bye()
+        FakeTarget(tmp_path / "beta.spool", "beta_leaf").emit(4).bye()
+        cfg = self._cfg(
+            tmp_path,
+            spool_paths=(str(tmp_path / "alpha.spool"), str(tmp_path / "beta.spool")),
+        )
+        ProfilerDaemon(cfg).run()  # both targets already said BYE: returns fast
+        src = OfflineSource(cfg.resolved_out_dir())
+        assert {r["name"] for r in src.targets()} == {"alpha", "beta"}
+        assert src.tree("alpha").total() == 6.0
+        assert src.tree().total() == 10.0
+        server = ProfileServer(src).start()
+        try:
+            _c, body = _http_get(server.url + "/targets")
+            assert {r["name"] for r in json.loads(body)["targets"]} == {"alpha", "beta"}
+            _c, folded = _http_get(server.url + "/tree?target=beta&fmt=folded")
+            assert "beta_leaf" in folded and "alpha_leaf" not in folded
+            code, _b = _http_get(server.url + "/tree?target=missing")
+            assert code == 404
+            _c, status_body = _http_get(server.url + "/status")
+            assert json.loads(status_body)["n_targets"] == 2
+        finally:
+            server.stop()
+
+    def test_watch_discovers_spool_created_after_start(self, tmp_path):
+        """Acceptance: --watch picks up a spool created after daemon start
+        within one drain interval."""
+        watch = tmp_path / "spools"
+        watch.mkdir()
+        cfg = self._cfg(tmp_path, watch_dir=str(watch), attach_timeout_s=10.0)
+        daemon = ProfilerDaemon(cfg)
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        early = FakeTarget(watch / "early.spool", "early_leaf").emit(3)
+        wait_until(lambda: daemon.n_stacks == 3, desc="first spool attached+drained")
+        t0 = time.monotonic()
+        late = FakeTarget(watch / "late.spool", "late_leaf").emit(2)
+        wait_until(lambda: daemon.n_stacks == 5, desc="late spool discovered")
+        # "within one drain interval" (0.01s) plus scheduler noise; 2s is the
+        # generous CI bound that still proves discovery is loop-driven.
+        assert time.monotonic() - t0 < 2.0
+        assert set(daemon.spools.sources) == {"early", "late"}
+        early.bye()
+        late.bye()
+        # A --watch daemon outlives done targets (new ones may appear): it
+        # exits on request_stop (the launcher sends SIGTERM).
+        wait_until(lambda: daemon.bye_seen, desc="both targets drained to BYE")
+        assert th.is_alive()
+        daemon.request_stop()
+        th.join(timeout=20)
+        assert not th.is_alive()
+        kinds = [e["kind"] for e in daemon.events]
+        assert kinds.count("TARGET_ATTACHED") == 2
+        assert daemon.tree.total() == 5.0
+
+    def test_watch_skips_garbage_spool_with_one_event(self, tmp_path):
+        watch = tmp_path / "spools"
+        watch.mkdir()
+        (watch / "junk.spool").write_bytes(b"\xde\xad\xbe\xef" * 64)
+        FakeTarget(watch / "good.spool", "good_leaf").emit(3).bye()
+        cfg = self._cfg(tmp_path, watch_dir=str(watch))
+        daemon = ProfilerDaemon(cfg)
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        wait_until(lambda: daemon.n_stacks == 3, desc="good spool drained")
+        daemon.request_stop()
+        th.join(timeout=20)
+        assert not th.is_alive()
+        fails = [e for e in daemon.events if e["kind"] == "SOURCE_ATTACH_FAILED"]
+        assert len(fails) == 1  # logged once, not once per drain pass
+        assert "junk" in fails[0]["path"] and "magic" in fails[0]["error"]
+        assert list(daemon.spools.sources) == ["good"]
+
+    def test_config_requires_a_source(self):
+        with pytest.raises(ValueError):
+            ProfilerDaemon(DaemonConfig())
+
+    def test_live_quiet_target_serves_empty_tree_not_404(self):
+        """A target that attached but has no published window yet is listed
+        by /targets, so /tree?target= must answer with an empty tree, not
+        contradict the listing with a 404."""
+        from repro.profilerd.profiles import ProfileLoadError
+        from repro.profilerd.server import LiveSource, SharedProfileState
+
+        shared = SharedProfileState()
+        shared.update({"targets": {"quiet": {"n_stacks": 0}}}, None, targets={})
+        src = LiveSource(shared)
+        assert src.tree("quiet").total() == 0.0
+        with pytest.raises(ProfileLoadError, match="unknown target"):
+            src.tree("missing")
+
+    def test_never_appearing_explicit_target_is_abandoned(self, tmp_path):
+        """A typo'd --targets path must not pin the run open forever: after
+        the attach window it is abandoned with a loud event and the daemon
+        exits once the real targets finish."""
+        FakeTarget(tmp_path / "real.spool", "real_leaf").emit(3).bye()
+        daemon = ProfilerDaemon(
+            self._cfg(
+                tmp_path,
+                spool_paths=(str(tmp_path / "real.spool"), str(tmp_path / "typo.spool")),
+                attach_timeout_s=0.3,
+            )
+        )
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        th.join(timeout=20)
+        assert not th.is_alive(), "daemon hung on the never-appearing target"
+        never = [e for e in daemon.events if e["kind"] == "TARGET_NEVER_APPEARED"]
+        assert len(never) == 1 and never[0]["target"] == "typo"
+        assert daemon.tree.total() == 3.0
+
+    def test_exit_with_dead_pid_stops_watch_daemon(self, tmp_path):
+        """--exit-with: a watch daemon whose supervisor died finishes cleanly
+        instead of leaking forever."""
+        watch = tmp_path / "spools"
+        watch.mkdir()
+        FakeTarget(watch / "job.spool", "leaf").emit(2).bye()
+        dead_pid = 2**22 + 12345  # beyond any live pid on this box
+        daemon = ProfilerDaemon(
+            self._cfg(tmp_path, watch_dir=str(watch), exit_with_pid=dead_pid)
+        )
+        th = threading.Thread(target=daemon.run, daemon=True)
+        th.start()
+        th.join(timeout=20)
+        assert not th.is_alive()
+        assert "SUPERVISOR_GONE" in [e["kind"] for e in daemon.events]
+        assert daemon.tree.total() == 2.0
 
 
 _TARGET = """

@@ -155,6 +155,62 @@ open(hb, 'w').write('done')
         rep = Launcher(cfg).run()
         assert rep.exit_code == 0 and rep.restarts == 0
 
+    def test_shared_profilerd_daemon_per_node(self, tmp_path):
+        """profile_dir starts ONE watch daemon for the whole job; it attaches
+        the child's spool as it appears and publishes the merged fleet tree
+        that rendezvous then just collects."""
+        from repro.launch.launcher import LaunchConfig, Launcher
+
+        src_root = os.path.join(os.path.dirname(__file__), "..", "src")
+        p = tmp_path / "child.py"
+        hb = tmp_path / "heartbeat"
+        p.write_text(
+            f"""
+import os, sys, time
+sys.path.insert(0, {os.path.abspath(src_root)!r})
+from repro.core import SamplerConfig, make_sampler
+s = make_sampler(SamplerConfig(backend="thread"))  # env routes to the daemon
+s.start()
+def launcher_child_busy_loop():
+    t0 = time.monotonic(); x = 0
+    while time.monotonic() - t0 < 1.0:
+        x += 1
+        if x % 100000 == 0:
+            open({str(hb)!r}, 'w').write(str(x))
+launcher_child_busy_loop()
+s.stop()
+"""
+        )
+        cfg = LaunchConfig(
+            cmd=[sys.executable, str(p)],
+            workdir=str(tmp_path),
+            heartbeat_path=str(hb),
+            heartbeat_timeout_s=20.0,
+            poll_s=0.1,
+            profile_dir=str(tmp_path / "prof"),
+            profile_period_s=0.05,
+            env={"JAX_PLATFORMS": "cpu",
+                 "PYTHONPATH": os.path.abspath(src_root)},
+        )
+        launcher = Launcher(cfg)
+        rep = launcher.run()
+        assert rep.exit_code == 0
+        assert len(launcher._daemons) == 1  # one shared daemon, not one per spool
+        fleet_tree = os.path.join(cfg.profile_dir, "fleet.d", "tree.json")
+        assert os.path.exists(fleet_tree)
+        # The child's DaemonBackend reads its artifacts where the shared
+        # daemon publishes them (REPRO_PROFILERD_OUT -> per-target dir).
+        target_dir = os.path.join(cfg.profile_dir, "fleet.d", "targets", "attempt0")
+        assert os.path.exists(os.path.join(target_dir, "tree.json"))
+        tstatus = json.load(open(os.path.join(target_dir, "status.json")))
+        assert tstatus["done"] and tstatus["n_stacks"] > 0
+        merged = os.path.join(cfg.profile_dir, "merged_tree.json")
+        assert os.path.exists(merged)
+        tree = json.load(open(merged))
+        names = json.dumps(tree)
+        assert "launcher_child_busy_loop" in names
+        assert any("merged 1 host tree" in e for e in rep.events)
+
     def test_gives_up_after_budget(self, tmp_path):
         from repro.launch.launcher import LaunchConfig, Launcher
 
