@@ -66,8 +66,16 @@ _EXPORTS = {
     "COLLECTIVE_OPS": ".hlo_tree",
     "build_device_tree": ".hlo_tree",
     "collective_summary": ".hlo_tree",
+    "load_device_tree": ".hlo_tree",
     "parse_hlo_module": ".hlo_tree",
+    "save_device_tree": ".hlo_tree",
     "tree_from_compiled": ".hlo_tree",
+    "DEVICE_TREE_FILENAME": ".planes",
+    "PLANES": ".planes",
+    "PlaneError": ".planes",
+    "annotate_tree": ".planes",
+    "dominant_term": ".planes",
+    "select_plane": ".planes",
     "V5E": ".roofline",
     "HardwareSpec": ".roofline",
     "RooflineReport": ".roofline",

@@ -281,6 +281,7 @@ _FLAME_PAGE = """<!DOCTYPE html>
  "use strict";
  var root = JSON.parse(document.getElementById('fgdata').textContent);
  var DIFF = !!root.diff;
+ var ROOF = !!root.roofline;
  var el = document.getElementById('fg'), crumb = document.getElementById('crumb');
  (function link(n) {{ n.c.forEach(function (k) {{ k.p = n; link(k); }}); }})(root);
  var zoomed = root;
@@ -296,6 +297,14 @@ _FLAME_PAGE = """<!DOCTYPE html>
      if (d >= 0) return 'rgb(255,' + Math.round(225 - 150 * d) + ',' + Math.round(160 - 120 * d) + ')';
      return 'rgb(' + Math.round(160 + 120 * d) + ',' + Math.round(205 + 40 * d) + ',255)';
    }}
+   if (ROOF) {{
+     var o = Math.max(0, Math.min(1, n.o || 0));
+     var l = (74 - 28 * o).toFixed(0) + '%';
+     if (n.t === 'compute') return 'hsl(28,90%,' + l + ')';
+     if (n.t === 'memory') return 'hsl(210,85%,' + l + ')';
+     if (n.t === 'collective') return 'hsl(130,55%,' + l + ')';
+     return 'hsl(240,3%,62%)';
+   }}
    var h = hue(n.n);
    return 'hsl(' + (h % 55) + ',' + (55 + h % 25) + '%,' + (52 + h % 12) + '%)';
  }}
@@ -308,6 +317,7 @@ _FLAME_PAGE = """<!DOCTYPE html>
    var t = n.n + '\\nvalue=' + n.v;
    if (DIFF) t += '\\nbaseline=' + n.b + '\\n\\u0394share=' + pct(n.d || 0);
    else if (root.v) t += '  (' + pct(n.v / root.v) + ' of total)';
+   if (ROOF && n.t) t += '\\ndominant=' + n.t + '\\noccupancy=' + pct(n.o || 0);
    return t;
  }}
  function render() {{
@@ -352,7 +362,7 @@ _FLAME_PAGE = """<!DOCTYPE html>
 """
 
 
-def _fg_data(node: CallNode, metric: str, diff: bool) -> dict:
+def _fg_data(node: CallNode, metric: str, diff: bool, roofline: bool = False) -> dict:
     v = node.metrics.get(metric, 0.0)
     d: dict = {"n": node.name, "v": v, "w": abs(v), "c": []}
     if diff:
@@ -360,8 +370,15 @@ def _fg_data(node: CallNode, metric: str, diff: bool) -> dict:
         d["b"] = b
         d["d"] = node.metrics.get(DIFF_SHARE_DELTA, 0.0)
         d["w"] = abs(v) + abs(b)
+    if roofline:
+        from .planes import OCCUPANCY, dominant_term
+
+        term = dominant_term(node.metrics)
+        if term is not None:
+            d["t"] = term
+            d["o"] = node.metrics.get(OCCUPANCY, 0.0)
     for c in sorted(node.children.values(), key=lambda c: -abs(c.metrics.get(metric, 0.0))):
-        d["c"].append(_fg_data(c, metric, diff))
+        d["c"].append(_fg_data(c, metric, diff, roofline))
     return d
 
 
@@ -371,20 +388,36 @@ def flamegraph_html(
     title: str = "flamegraph",
     *,
     diff: bool = False,
+    roofline: bool = False,
 ) -> str:
     """One self-contained interactive flamegraph page (no external resources).
 
     ``diff=True`` expects a tree from :func:`build_diff_tree`: rect widths
     combine baseline+candidate mass and colors encode the share delta
     (red = candidate gained share, blue = lost).
+
+    ``roofline=True`` expects a merged-plane tree from
+    :func:`repro.core.planes.annotate_tree`: each frame is colored by its
+    dominant roofline term (orange = compute, blue = memory, green =
+    collective; gray = no device annotation), with the shade deepening as the
+    node's roofline occupancy grows.
     """
-    data = _fg_data(tree.root, metric, diff)
+    data = _fg_data(tree.root, metric, diff, roofline)
     data["diff"] = diff
-    legend = (
-        "color: share delta vs baseline &mdash; red grew, blue shrank; click a frame to zoom"
-        if diff
-        else "click a frame to zoom; click [reset zoom] to return"
-    )
+    data["roofline"] = roofline
+    if diff:
+        legend = "color: share delta vs baseline &mdash; red grew, blue shrank; click a frame to zoom"
+    elif roofline:
+        legend = (
+            "color: dominant roofline term &mdash; "
+            '<span style="color:hsl(28,90%,55%)">compute</span>, '
+            '<span style="color:hsl(210,85%,60%)">memory</span>, '
+            '<span style="color:hsl(130,55%,50%)">collective</span>, '
+            "gray = no device annotation; darker = higher roofline occupancy; "
+            "click a frame to zoom"
+        )
+    else:
+        legend = "click a frame to zoom; click [reset zoom] to return"
     # `</` must not appear verbatim inside the <script> data island (a frame
     # named "</script>" would terminate it); "<\/" is the same JSON string.
     blob = json.dumps(data).replace("</", "<\\/")
@@ -467,6 +500,7 @@ def export_tree(
     metric: Optional[str] = None,
     title: str = "calltree",
     diff: bool = False,
+    roofline: bool = False,
 ) -> str:
     """Render ``tree`` in any supported format, optionally through a view.
 
@@ -497,4 +531,4 @@ def export_tree(
         return to_speedscope_json(applied, metric, name=title)
     if fmt == "json":
         return applied.to_json()
-    return flamegraph_html(applied, metric, title=title, diff=diff)
+    return flamegraph_html(applied, metric, title=title, diff=diff, roofline=roofline)

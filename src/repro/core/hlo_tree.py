@@ -26,6 +26,8 @@ shapes, so every metric here is **per device** — consistent with
 
 from __future__ import annotations
 
+import json
+import os
 import re
 from dataclasses import dataclass, field
 from typing import Optional
@@ -168,9 +170,16 @@ def parse_hlo_module(text: str) -> dict[str, HloComputation]:
                     break
                 depth -= 1
         operand_str, attrs = rest[:end], rest[end + 1:]
-        operands = re.findall(r"%?([\w.\-]+)", operand_str)
-        # Keep only tokens that look like op names (filter literals like "0").
-        operands = [o for o in operands if not re.fullmatch(r"[0-9.eE+\-]+", o)]
+        if "%" in operand_str:
+            # Typed operand lists (`dot(f32[8,16]{1,0} %Arg_0.1, ...)`): only
+            # %-prefixed tokens are operand names; the rest is dtype/layout
+            # noise that would otherwise shadow operand 0 and zero out the
+            # dot-flops / traffic attribution.
+            operands = re.findall(r"%([\w.\-]+)", operand_str)
+        else:
+            operands = re.findall(r"([\w.\-]+)", operand_str)
+            # Keep only tokens that look like op names (filter literals like "0").
+            operands = [o for o in operands if not re.fullmatch(r"[0-9.eE+\-]+", o)]
         mmeta = _METADATA_RE.search(attrs)
         mtrip = _TRIP_RE.search(attrs)
         called = _CALLS_RE.findall(attrs)
@@ -326,11 +335,41 @@ def tree_from_compiled(compiled, **kw) -> CallTree:
     return build_device_tree(compiled.as_text(), **kw)
 
 
-def save_device_tree(tree: CallTree, path: str) -> None:
-    with open(path, "w") as f:
-        f.write(tree.to_json())
+DEVICE_TREE_SCHEMA = "repro-device-tree/v1"
+
+
+def save_device_tree(tree: CallTree, path: str, *, meta: Optional[dict] = None) -> None:
+    """Persist a device-plane tree as a versioned ``device_tree.json`` artifact.
+
+    The write is atomic (tmp + rename): daemons and servers discover this file
+    lazily beside a profile that is still being written.  JSON float encoding
+    is ``repr``-based, so every metric value — including ``while``
+    trip-count-multiplied flops and per-kind ``coll_bytes::*`` counters —
+    roundtrips bit-exactly through :func:`load_device_tree`.
+    """
+    doc: dict = {"schema": DEVICE_TREE_SCHEMA, "root": tree.root.to_dict()}
+    if meta:
+        doc["meta"] = dict(meta)
+    tmp = f"{path}.tmp.{id(doc)}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, path)
 
 
 def load_device_tree(path: str) -> CallTree:
+    """Load a ``device_tree.json`` (versioned envelope or legacy bare root)."""
     with open(path) as f:
-        return CallTree.from_json(f.read())
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: not a device tree artifact")
+    if "schema" in doc:
+        if doc["schema"] != DEVICE_TREE_SCHEMA:
+            raise ValueError(f"{path}: unsupported device tree schema {doc['schema']!r}")
+        root = doc.get("root")
+    else:  # legacy: a bare CallTree.to_json() dump
+        root = doc
+    if not isinstance(root, dict) or "name" not in root:
+        raise ValueError(f"{path}: device tree artifact has no root node")
+    from .calltree import CallNode
+
+    return CallTree(CallNode.from_dict(root))

@@ -33,14 +33,15 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    qh = jnp.swapaxes(q, 1, 2)
-    kh = jnp.swapaxes(k, 1, 2)
-    vh = jnp.swapaxes(v, 1, 2)
-    o = flash_attention_bhsd(
-        qh, kh, vh, causal=causal, window=window, block_q=block_q, block_k=block_k,
-        interpret=interpret,
-    )
-    return jnp.swapaxes(o, 1, 2)
+    with jax.named_scope("flash_attention"):
+        qh = jnp.swapaxes(q, 1, 2)
+        kh = jnp.swapaxes(k, 1, 2)
+        vh = jnp.swapaxes(v, 1, 2)
+        o = flash_attention_bhsd(
+            qh, kh, vh, causal=causal, window=window, block_q=block_q, block_k=block_k,
+            interpret=interpret,
+        )
+        return jnp.swapaxes(o, 1, 2)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
@@ -52,7 +53,8 @@ def rglru_scan(
     block_w: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    return rglru_scan_pallas(a, b, block_s=block_s, block_w=block_w, interpret=interpret)
+    with jax.named_scope("rglru_scan"):
+        return rglru_scan_pallas(a, b, block_s=block_s, block_w=block_w, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
@@ -64,4 +66,5 @@ def fused_rmsnorm(
     block_rows: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    return fused_rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows, interpret=interpret)
+    with jax.named_scope("fused_rmsnorm"):
+        return fused_rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows, interpret=interpret)

@@ -31,7 +31,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import SHAPES, get_config, list_archs, shape_applicable  # noqa: E402
-from repro.core.hlo_tree import build_device_tree, collective_summary  # noqa: E402
+from repro.core.hlo_tree import build_device_tree, collective_summary, save_device_tree  # noqa: E402
 from repro.core.roofline import report_from_artifacts  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_chips  # noqa: E402
 from repro.launch.steps import make_serve_step, make_train_step  # noqa: E402
@@ -186,12 +186,13 @@ def run_cell(
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax returns [per-device dict]
+            ca = ca[0] if ca else {}
         tree = build_device_tree(compiled.as_text(), step_name=f"{arch}:{shape_name}")
         colls = collective_summary(tree)
         if dump_tree:
             os.makedirs(os.path.dirname(dump_tree) or ".", exist_ok=True)
-            with open(dump_tree, "w") as f:
-                f.write(tree.to_json())
+            save_device_tree(tree, dump_tree, meta={"arch": arch, "shape": shape_name, "mesh": mesh_name})
         from repro.core.report import breakdown
 
         component_breakdown = {

@@ -173,9 +173,41 @@ class Launcher:
         with open(out, "w") as f:
             f.write(merged.to_json())
         self.report.log(f"rendezvous: merged {n} host tree(s) -> {out}")
+        self._surface_device_tree()
         self._merge_timelines()
         self._serve_merged()
         return out
+
+    def _surface_device_tree(self) -> None:
+        """Copy a target-dropped ``device_tree.json`` beside the merged tree.
+
+        Trainers drop the artifact into their daemon target dir (all
+        co-located attempts run the same compiled program, so any one copy
+        serves the fleet); surfacing it at the profile-dir root lets the
+        rendezvous server answer ``/tree?plane=device|merged`` and
+        ``profilerd check --plane`` gate the merged profile.
+        """
+        import glob
+
+        dst = os.path.join(self.cfg.profile_dir, "device_tree.json")
+        if os.path.exists(dst):
+            return
+        candidates = sorted(
+            glob.glob(os.path.join(self.cfg.profile_dir, "*.d", "device_tree.json"))
+            + glob.glob(os.path.join(self.cfg.profile_dir, "*.d", "targets", "*", "device_tree.json"))
+        )
+        if not candidates:
+            return
+        try:
+            with open(candidates[0]) as f:
+                payload = f.read()
+            tmp = f"{dst}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                f.write(payload)
+            os.replace(tmp, dst)
+            self.report.log(f"rendezvous: device plane {candidates[0]} -> {dst}")
+        except OSError as e:
+            self.report.log(f"rendezvous: device plane copy failed: {e}")
 
     def _serve_merged(self) -> None:
         """Expose the fleet-merged profile over the HTTP query plane.

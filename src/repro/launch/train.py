@@ -128,6 +128,7 @@ class Trainer:
         self.detector.add_callback(self._on_anomaly)
         self.watchdog = WatchdogLoop(self.sampler, self.detector, interval_s=1.0) if self.sampler else None
         self.anomalies: list = []
+        self._device_tree_dumped = not job.profile  # device plane rides the profiling plane
 
     # -- fault-tolerance hooks ---------------------------------------------------
 
@@ -139,6 +140,33 @@ class Trainer:
     def _touch_heartbeat(self) -> None:
         with open(self._heartbeat_path, "w") as f:
             f.write(f"{self.step} {time.time()}")
+
+    def _dump_device_tree(self, batch: dict) -> None:
+        """Drop the device-plane artifact beside the host profile (once).
+
+        AOT lower+compile of the same train step the loop runs, costed into a
+        CallTree by ``op_name`` path — the daemon/server merge it onto the
+        sampled host tree (``?plane=merged``).  Also lands in the launcher's
+        per-target daemon dir (``REPRO_PROFILERD_OUT``) where the shared
+        daemon's lazy discovery picks it up.  Best-effort: the device plane
+        must never cost the training run.
+        """
+        self._device_tree_dumped = True
+        try:
+            from repro.core.hlo_tree import save_device_tree, tree_from_compiled
+
+            compiled = self._train_step.lower(self.params, self.opt_state, batch).compile()
+            tree = tree_from_compiled(compiled)
+            dests = [os.path.join(self.job.out_dir, "device_tree.json")]
+            env_out = os.environ.get("REPRO_PROFILERD_OUT")
+            if env_out:
+                dests.append(os.path.join(env_out, "device_tree.json"))
+            for p in dests:
+                os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+                save_device_tree(tree, p, meta={"arch": self.cfg.name, "source": "train"})
+            print(f"[train] device plane: {dests[0]} ({tree.node_count()} call sites)")
+        except Exception as e:  # noqa: BLE001 - any failure here is non-fatal
+            print(f"[train] device-tree dump skipped: {e}")
 
     def _state_tree(self) -> dict:
         return {
@@ -174,6 +202,10 @@ class Trainer:
         try:
             while self.step < self.job.steps:
                 batch = {k: jnp.asarray(v) for k, v in next(self.data).items()}
+                if not self._device_tree_dumped:
+                    # Before the step call: donation invalidates the argument
+                    # buffers, and lowering only needs their avals anyway.
+                    self._dump_device_tree(batch)
                 self.params, self.opt_state, metrics = self._train_step(
                     self.params, self.opt_state, batch
                 )

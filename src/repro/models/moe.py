@@ -66,8 +66,9 @@ def moe(params, x, cfg, *, ep_constraint=None, scope: str = "moe"):
         with jax.named_scope("router"):
             logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"]["w"])
             probs = jax.nn.softmax(logits, axis=-1)
-            gate_w, gate_ids = jax.lax.top_k(probs, K)  # (T,K)
-            gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)  # renorm over selected
+            with jax.named_scope("top_k"):
+                gate_w, gate_ids = jax.lax.top_k(probs, K)  # (T,K)
+                gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)  # renorm over selected
         with jax.named_scope("dispatch"):
             flat_ids = gate_ids.reshape(-1)  # (T*K,)
             order = jnp.argsort(flat_ids)  # stable

@@ -48,14 +48,15 @@ def recurrent_block_spec(cfg) -> dict:
 
 def _gates(params, x):
     """a_t (log-space) and gated input for the recurrence. x: (B,S,W)."""
-    xf = x.astype(jnp.float32)
-    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, params["wa"]) + params["ba"])
-    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, params["wx"]) + params["bx"])
-    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # <= 0
-    a = jnp.exp(log_a)
-    # sqrt(1-a^2) in a numerically safe form
-    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
-    return a, beta * (i * xf)
+    with jax.named_scope("gates"):
+        xf = x.astype(jnp.float32)
+        r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, params["wa"]) + params["ba"])
+        i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, params["wx"]) + params["bx"])
+        log_a = -_C * jax.nn.softplus(params["lam"]) * r  # <= 0
+        a = jnp.exp(log_a)
+        # sqrt(1-a^2) in a numerically safe form
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        return a, beta * (i * xf)
 
 
 def rglru(params, x, *, h0=None, scope: str = "rg_lru", impl: str = "xla", chunk: int = 256):
@@ -110,9 +111,10 @@ def rglru(params, x, *, h0=None, scope: str = "rg_lru", impl: str = "xla", chunk
 
 def rglru_step(params, x_t, h_prev):
     """One decode step. x_t: (B,1,W); h_prev: (B,W)."""
-    a, b = _gates(params, x_t)
-    h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
-    return h[:, None].astype(x_t.dtype), h
+    with jax.named_scope("rg_lru"):
+        a, b = _gates(params, x_t)
+        h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
+        return h[:, None].astype(x_t.dtype), h
 
 
 def causal_conv1d(params, x, *, scope: str = "conv1d"):
@@ -127,11 +129,12 @@ def causal_conv1d(params, x, *, scope: str = "conv1d"):
 
 def causal_conv1d_step(params, x_t, conv_state):
     """Decode: conv_state holds the last Wc-1 inputs. x_t: (B,1,W)."""
-    w = params["conv_w"].astype(x_t.dtype)
-    Wc = w.shape[0]
-    window = jnp.concatenate([conv_state, x_t], axis=1)  # (B, Wc, W)
-    y = jnp.einsum("bcw,cw->bw", window, w)[:, None] + params["conv_b"].astype(x_t.dtype)
-    return y, window[:, 1:]
+    with jax.named_scope("conv1d"):
+        w = params["conv_w"].astype(x_t.dtype)
+        Wc = w.shape[0]
+        window = jnp.concatenate([conv_state, x_t], axis=1)  # (B, Wc, W)
+        y = jnp.einsum("bcw,cw->bw", window, w)[:, None] + params["conv_b"].astype(x_t.dtype)
+        return y, window[:, 1:]
 
 
 def recurrent_block(params, x, cfg, *, scope: str = "recurrent_block"):

@@ -51,14 +51,26 @@ import os
 import sys
 
 from repro.core.detector import Rule
+from repro.core.planes import PLANES, PlaneError, default_metric, select_plane
 
 from .daemon import DaemonConfig, ProfilerDaemon
-from .profiles import TIMELINE_DIRNAME, ProfileLoadError, load_profile
+from .profiles import TIMELINE_DIRNAME, ProfileLoadError, load_device_plane, load_profile
 from .spool import SpoolError
 
 EXIT_REGRESSION = 2
 EXIT_UNREADABLE = 3
-EXIT_NO_MATCH = 4  # a --view/--root selector matched no node
+EXIT_NO_MATCH = 4  # a --view/--root selector (or --plane artifact) matched nothing
+
+
+def _resolve_plane(tree, profile_path: str, plane: str):
+    """Apply ``--plane`` to a loaded profile via its own device artifact.
+
+    Raises :class:`PlaneError` (caller exits ``EXIT_NO_MATCH`` with the remedy
+    hint — a missing artifact is "selector matched nothing", not corruption)
+    or :class:`ProfileLoadError` for a present-but-garbage artifact."""
+    if plane == "host":
+        return tree
+    return select_plane(tree, load_device_plane(profile_path), plane, profile=profile_path)
 
 
 def _print_status(d: ProfilerDaemon) -> None:
@@ -94,6 +106,7 @@ def cmd_attach(args) -> int:
         epoch_s=args.epoch,
         serve_port=args.serve,
         exit_with_pid=args.exit_with,
+        device_tree=args.device_tree,
     )
     daemon = ProfilerDaemon(cfg)
     # SIGTERM = finish cleanly: final drain + seal + publish + report.  This
@@ -163,7 +176,8 @@ def cmd_top(args) -> int:
     from .server import top_loop
 
     try:
-        return top_loop(args.url, interval_s=args.interval, k=args.k, once=args.once)
+        return top_loop(args.url, interval_s=args.interval, k=args.k, once=args.once,
+                        plane=args.plane)
     except KeyboardInterrupt:
         return 0
 
@@ -173,10 +187,14 @@ def cmd_export(args) -> int:
     from repro.core.report import ViewConfig
 
     try:
-        tree = load_profile(args.profile)
+        tree = _resolve_plane(load_profile(args.profile), args.profile, args.plane)
+    except PlaneError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return EXIT_NO_MATCH
     except ProfileLoadError as e:
         print(f"[profilerd] {e}", file=sys.stderr)
         return EXIT_UNREADABLE
+    metric_arg = default_metric(args.plane, args.metric)
     fmt = args.fmt or ("html" if args.baseline else "folded")
     view = None
     if args.view:
@@ -201,11 +219,11 @@ def cmd_export(args) -> int:
     # artifact that reads as "this code path costs nothing".  prepare_view
     # applies zoom/filters/level/min_share exactly once and owns every
     # emptiness verdict (incl. fmt stacklessness, e.g. a level=0 fold).
-    applied, metric, marker = prepare_view(tree, view, args.metric, fmt=fmt)
+    applied, metric, marker = prepare_view(tree, view, metric_arg, fmt=fmt)
     if marker is not None:
         print(f"[profilerd] {marker}", file=sys.stderr)
         if fmt == "csv":
-            print(export_tree(tree, "csv", view=view, metric=args.metric, title=args.profile))
+            print(export_tree(tree, "csv", view=view, metric=metric_arg, title=args.profile))
         return EXIT_NO_MATCH
     if args.baseline:
         if fmt != "html":  # usage error, not an unreadable profile: exit 2
@@ -213,25 +231,31 @@ def cmd_export(args) -> int:
                   f"--fmt html (got --fmt {fmt})", file=sys.stderr)
             return 2
         try:
-            baseline = load_profile(args.baseline)
+            baseline = _resolve_plane(load_profile(args.baseline), args.baseline, args.plane)
+        except PlaneError as e:
+            print(f"[profilerd] baseline: {e}", file=sys.stderr)
+            return EXIT_NO_MATCH
         except ProfileLoadError as e:
             print(f"[profilerd] {e}", file=sys.stderr)
             return EXIT_UNREADABLE
         # The baseline goes through the SAME prepare_view pipeline as the
         # candidate (incl. min_share pruning) — asymmetric filtering would
         # paint sub-threshold call-sites as phantom share deltas.
-        baseline, _, _ = prepare_view(baseline, view, args.metric)
+        baseline, _, _ = prepare_view(baseline, view, metric_arg)
         payload = diff_flamegraph_html(baseline, applied, metric,
                                        title=f"{args.baseline} vs {args.profile}")
     else:
         assert fmt in EXPORT_FORMATS
         title = os.path.basename(args.profile.rstrip("/")) or args.profile
+        if args.plane != "host":
+            title = f"{title} [{args.plane} plane]"
         if fmt == "csv":
-            payload = export_tree(tree, "csv", view=view, metric=args.metric, title=title)
+            payload = export_tree(tree, "csv", view=view, metric=metric_arg, title=title)
         else:
             if view is not None:
                 title = f"{title} [{view.name}]"
-            payload = export_tree(applied, fmt, metric=metric, title=title)
+            payload = export_tree(applied, fmt, metric=metric, title=title,
+                                  roofline=args.plane == "merged")
     if args.out:
         with open(args.out, "w") as f:
             f.write(payload)
@@ -302,16 +326,20 @@ def cmd_diff(args) -> int:
     from repro.core.report import render_diff
 
     try:
-        a = load_profile(args.a)
-        b = load_profile(args.b)
+        a = _resolve_plane(load_profile(args.a), args.a, args.plane)
+        b = _resolve_plane(load_profile(args.b), args.b, args.plane)
+    except PlaneError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return EXIT_NO_MATCH
     except ProfileLoadError as e:
         print(f"[profilerd] {e}", file=sys.stderr)
         return EXIT_UNREADABLE
+    metric = default_metric(args.plane, args.metric) or "samples"
     print(
         render_diff(
             a,
             b,
-            metric=args.metric,
+            metric=metric,
             label_a=os.path.basename(args.a.rstrip("/")) or args.a,
             label_b=os.path.basename(args.b.rstrip("/")) or args.b,
             min_delta=args.min_delta,
@@ -325,7 +353,7 @@ def cmd_diff(args) -> int:
         with open(args.html, "w") as f:
             f.write(
                 diff_flamegraph_html(
-                    a, b, args.metric,
+                    a, b, metric,
                     title=f"{os.path.basename(args.a.rstrip('/')) or args.a} vs "
                           f"{os.path.basename(args.b.rstrip('/')) or args.b}",
                 )
@@ -339,31 +367,38 @@ def cmd_check(args) -> int:
     from repro.core.report import name_shares, share_regressions
 
     try:
-        baseline = load_profile(args.baseline)
+        baseline = _resolve_plane(load_profile(args.baseline), args.baseline, args.plane)
+    except PlaneError as e:
+        print(f"[profilerd] baseline: {e}", file=sys.stderr)
+        return EXIT_NO_MATCH
     except ProfileLoadError as e:
         print(f"[profilerd] missing/unreadable baseline: {e}", file=sys.stderr)
         return EXIT_UNREADABLE
     try:
-        current = load_profile(args.profile)
+        current = _resolve_plane(load_profile(args.profile), args.profile, args.plane)
+    except PlaneError as e:
+        print(f"[profilerd] {e}", file=sys.stderr)
+        return EXIT_NO_MATCH
     except ProfileLoadError as e:
         print(f"[profilerd] missing/unreadable profile: {e}", file=sys.stderr)
         return EXIT_UNREADABLE
+    metric = default_metric(args.plane, args.metric) or "samples"
     # An empty profile must not pass vacuously (every baseline function
     # "lost share"): a gate that stops gating when profiling broke is worse
     # than a red build.
-    if current.total(args.metric) <= 0:
-        print(f"[profilerd] profile {args.profile} holds no '{args.metric}' data", file=sys.stderr)
+    if current.total(metric) <= 0:
+        print(f"[profilerd] profile {args.profile} holds no '{metric}' data", file=sys.stderr)
         return EXIT_UNREADABLE
-    if baseline.total(args.metric) <= 0:
-        print(f"[profilerd] baseline {args.baseline} holds no '{args.metric}' data", file=sys.stderr)
+    if baseline.total(metric) <= 0:
+        print(f"[profilerd] baseline {args.baseline} holds no '{metric}' data", file=sys.stderr)
         return EXIT_UNREADABLE
     self_only = not args.inclusive
     regs = share_regressions(
-        baseline, current, metric=args.metric, tolerance=args.tolerance, self_only=self_only
+        baseline, current, metric=metric, tolerance=args.tolerance, self_only=self_only
     )
     dist = share_distance(
-        name_shares(baseline, args.metric, self_only=self_only),
-        name_shares(current, args.metric, self_only=self_only),
+        name_shares(baseline, metric, self_only=self_only),
+        name_shares(current, metric, self_only=self_only),
     )
     verdict = "REGRESSION" if regs else "PASS"
     print(
@@ -404,6 +439,11 @@ def main(argv=None) -> int:
     at.add_argument("--exit-with", type=int, default=None, metavar="PID",
                     help="finish cleanly when PID dies (supervisors pass their own "
                          "pid so a --watch daemon can never be leaked)")
+    at.add_argument("--device-tree", default=None, metavar="PATH",
+                    help="device-plane artifact (launch.dryrun --dump-tree) for the "
+                         "fleet's compiled program; enables plane=device|merged on the "
+                         "query plane and roofline-annotated timeline epochs (default: "
+                         "discover device_tree.json dropped into the out/target dirs)")
     at.set_defaults(fn=cmd_attach)
 
     sv = sub.add_parser("serve", help="HTTP API over an offline profile artifact")
@@ -420,6 +460,9 @@ def main(argv=None) -> int:
     tp.add_argument("--interval", type=float, default=2.0)
     tp.add_argument("-k", type=int, default=10, help="hot paths shown")
     tp.add_argument("--once", action="store_true", help="print one frame and exit (CI/tests)")
+    tp.add_argument("--plane", default="host", choices=list(PLANES),
+                    help="also show the plane's hottest paths with roofline occupancy "
+                         "+ dominant-term columns (exit 4 if the server has no device plane)")
     tp.set_defaults(fn=cmd_top)
 
     ex = sub.add_parser("export", help="render a profile as folded/speedscope/html/csv/json")
@@ -431,6 +474,9 @@ def main(argv=None) -> int:
     ex.add_argument("--level", type=int, default=None, help="fold level (-1 = expand to leaves)")
     ex.add_argument("--min-share", type=float, default=None, help="prune below this share")
     ex.add_argument("--metric", default=None)
+    ex.add_argument("--plane", default="host", choices=list(PLANES),
+                    help="profile plane: sampled host tree, HLO device cost tree, or the "
+                         "roofline-annotated merge (exit 4 when device_tree.json is absent)")
     ex.add_argument("--baseline", default=None,
                     help="render a share-delta diff flamegraph against this profile (--fmt html)")
     ex.add_argument("--out", default=None, help="write here instead of stdout")
@@ -455,7 +501,9 @@ def main(argv=None) -> int:
     df = sub.add_parser("diff", help="cross-run tree diff (per-node share deltas)")
     df.add_argument("a", help="baseline profile (out dir / timeline / tree.json / .snap)")
     df.add_argument("b", help="candidate profile")
-    df.add_argument("--metric", default="samples")
+    df.add_argument("--metric", default=None, help="default: samples (flops on --plane device)")
+    df.add_argument("--plane", default="host", choices=list(PLANES),
+                    help="diff this plane on both sides (each via its own device_tree.json)")
     df.add_argument("--min-delta", type=float, default=0.002, help="hide smaller share deltas")
     df.add_argument("--top", type=int, default=40, help="max rows")
     df.add_argument("--self-only", action="store_true", help="diff self shares instead of inclusive")
@@ -468,7 +516,10 @@ def main(argv=None) -> int:
     ck.add_argument("--baseline", required=True, help="reference profile")
     ck.add_argument("--tolerance", type=float, default=0.05,
                     help="max allowed per-function share increase")
-    ck.add_argument("--metric", default="samples")
+    ck.add_argument("--metric", default=None, help="default: samples (flops on --plane device)")
+    ck.add_argument("--plane", default="host", choices=list(PLANES),
+                    help="gate this plane (e.g. --plane merged --metric roofline_occupancy "
+                         "to fail on device-plane share regressions)")
     ck.add_argument("--inclusive", action="store_true",
                     help="compare inclusive shares instead of self shares")
     ck.add_argument("--top", type=int, default=20, help="max regression rows printed")

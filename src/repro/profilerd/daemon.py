@@ -40,7 +40,7 @@ from repro.core.calltree import CallTree
 from repro.core.detector import Rule, TrendRule
 from repro.core.snapshot import EpochMeta, TimelineWriter
 
-from .profiles import TARGETS_DIRNAME, TIMELINE_DIRNAME
+from .profiles import DEVICE_TREE_FILENAME, TARGETS_DIRNAME, TIMELINE_DIRNAME
 from .sources import STALLED, SpoolSet, SpoolSource, _pid_alive, source_name_for
 from .spool import SpoolError, SpoolReader, _ShortHeader
 
@@ -59,6 +59,7 @@ def spawn_attached_daemon(
     epoch_s: Optional[float] = None,
     serve_port: Optional[int] = None,
     exit_with_pid: Optional[int] = None,
+    device_tree: Optional[str] = None,
     cwd: Optional[str] = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
@@ -97,6 +98,8 @@ def spawn_attached_daemon(
         cmd += ["--serve", str(serve_port)]
     if exit_with_pid is not None:
         cmd += ["--exit-with", str(exit_with_pid)]
+    if device_tree is not None:
+        cmd += ["--device-tree", device_tree]
     return subprocess.Popen(
         cmd, cwd=cwd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL
     )
@@ -141,6 +144,14 @@ class DaemonConfig:
     # SIGTERM would otherwise leak it forever; the launcher passes its own
     # pid here.
     exit_with_pid: Optional[int] = None
+    # Device-plane artifact (core/hlo_tree.save_device_tree) for the fleet's
+    # compiled program.  Explicit path, or None to lazily discover a
+    # ``device_tree.json`` dropped into the out dir / a target dir — targets
+    # compile *after* the daemon starts, so discovery must be late-bound.
+    # When present the fleet timeline seals roofline-annotated epochs (solo
+    # mode switches from the CountSealer fast path to the generic fleet ring
+    # to carry them) and the live server gains plane=device|merged.
+    device_tree: Optional[str] = None
 
     def resolved_out_dir(self) -> str:
         if self.out_dir:
@@ -187,10 +198,18 @@ class ProfilerDaemon:
             watch_glob=cfg.watch_glob,
             make_source=self._make_source,
         )
+        # Device plane: loaded from cfg.device_tree or discovered beside the
+        # out dir once a target drops its artifact (see _refresh_device_tree).
+        self._device_tree: Optional[CallTree] = None
+        self._device_tree_mtime = -1.0
+        self._device_tree_error: Optional[str] = None
         # Fleet timeline ring (multi mode): per-target rings are sealed by
         # each source's CountSealer; the fleet ring is merged at seal time.
+        # Solo mode with an explicit device tree also takes this path — the
+        # CountSealer fast lane is samples-only and cannot carry roofline
+        # annotations, so annotated epochs go through the generic codec.
         self.fleet_writer: Optional[TimelineWriter] = None
-        if cfg.epoch_s > 0 and not self.solo:
+        if cfg.epoch_s > 0 and (not self.solo or cfg.device_tree):
             self.fleet_writer = TimelineWriter(
                 cfg.resolved_timeline_dir(),
                 epochs_per_segment=cfg.epochs_per_segment,
@@ -290,11 +309,12 @@ class ProfilerDaemon:
         try:
             tdir = None
             if self.cfg.epoch_s > 0:
-                tdir = (
-                    self.cfg.resolved_timeline_dir()
-                    if self.solo
-                    else os.path.join(self._target_dir(name), TIMELINE_DIRNAME)
-                )
+                if self.solo:
+                    # The fleet writer owns the solo ring when annotating
+                    # (device-tree mode); the source must not also seal there.
+                    tdir = None if self.fleet_writer is not None else self.cfg.resolved_timeline_dir()
+                else:
+                    tdir = os.path.join(self._target_dir(name), TIMELINE_DIRNAME)
             src = SpoolSource(
                 name,
                 path,
@@ -392,6 +412,63 @@ class ProfilerDaemon:
 
     # -- analysis / publication ---------------------------------------------
 
+    def _device_tree_candidates(self) -> list[str]:
+        if self.cfg.device_tree:
+            return [self.cfg.device_tree]
+        cands = [os.path.join(self.out_dir, DEVICE_TREE_FILENAME)]
+        tdir = os.path.join(self.out_dir, TARGETS_DIRNAME)
+        if os.path.isdir(tdir):
+            for name in sorted(os.listdir(tdir)):
+                cands.append(os.path.join(tdir, name, DEVICE_TREE_FILENAME))
+        return cands
+
+    def _refresh_device_tree(self) -> None:
+        """Pick up the device-plane artifact, possibly dropped mid-run.
+
+        Targets lower+compile *after* attaching, so the artifact usually lands
+        after the daemon started; one existence/mtime probe per publish window
+        keeps discovery off the ingest path.  A loaded tree is copied to the
+        out dir (making it self-contained for later offline serving) and
+        handed to the live query plane.
+        """
+        path = next((p for p in self._device_tree_candidates() if os.path.exists(p)), None)
+        if path is None:
+            return
+        try:
+            mtime = os.path.getmtime(path)
+        except OSError:
+            return
+        if self._device_tree is not None and mtime <= self._device_tree_mtime:
+            return
+        from repro.core.hlo_tree import load_device_tree
+
+        try:
+            tree = load_device_tree(path)
+        except (OSError, ValueError, KeyError) as e:
+            if self._device_tree_error != str(e):  # log each distinct failure once
+                self._device_tree_error = str(e)
+                self._record_event(
+                    {"kind": "DEVICE_TREE_UNREADABLE", "path": path,
+                     "error": str(e), "wall_time": time.time()}
+                )
+            return
+        self._device_tree = tree
+        self._device_tree_mtime = mtime
+        self._device_tree_error = None
+        fleet_copy = os.path.join(self.out_dir, DEVICE_TREE_FILENAME)
+        if os.path.abspath(path) != os.path.abspath(fleet_copy):
+            try:
+                with open(path) as f:
+                    _atomic_write(fleet_copy, f.read())
+            except OSError:
+                pass  # serving still works from the in-memory tree
+        if self.shared is not None:
+            self.shared.set_device_tree(tree)
+        self._record_event(
+            {"kind": "DEVICE_TREE_LOADED", "path": path,
+             "call_sites": tree.node_count(), "wall_time": time.time()}
+        )
+
     def seal_epoch(self) -> None:
         """Seal the current window into the timeline ring(s) + trend rules.
 
@@ -402,6 +479,9 @@ class ProfilerDaemon:
         """
         if self.cfg.epoch_s <= 0:
             return
+        # A short run can seal its only epoch before the first publish window
+        # ever fires — the artifact must still be picked up here.
+        self._refresh_device_tree()
         wall = time.time()
         for s in self.sources:
             try:
@@ -430,10 +510,22 @@ class ProfilerDaemon:
             fleet = CallTree()
             for s in self.sources:
                 fleet.merge(s.tree)
+            if self._device_tree is not None:
+                # Annotations are ordinary metric keys, so the sealed epochs
+                # carry the device plane through the unchanged codec — and
+                # cross-run diff/check can gate on roofline regressions.
+                from repro.core.planes import annotate_tree
+
+                # The fleet tree was built fresh above, so annotate in place:
+                # the device plane's marginal cost is one attribution walk.
+                fleet = annotate_tree(fleet, self._device_tree, copy=False)
             meta = EpochMeta(
                 self._fleet_epoch,
                 wall,
-                float(sum(s.sealer.node_count for s in self.sources if s.sealer)),
+                float(
+                    sum(s.sealer.node_count for s in self.sources if s.sealer)
+                    or fleet.node_count()  # solo device-tree mode: no sealers
+                ),
             )
             try:
                 if self._fleet_prev is None or self.fleet_writer.needs_keyframe():
@@ -469,6 +561,8 @@ class ProfilerDaemon:
         if self.server is not None:
             return self.server
         self.shared = SharedProfileState()
+        if self._device_tree is not None:
+            self.shared.set_device_tree(self._device_tree)
         tdir = self.cfg.resolved_timeline_dir() if self.cfg.epoch_s > 0 else None
         label = f"pid={self.target_pid or '?'}" if self.solo else f"fleet:{self.out_dir}"
         source = LiveSource(
@@ -495,6 +589,7 @@ class ProfilerDaemon:
 
     def publish(self) -> None:
         """One analysis window: detector verdicts + status/tree artifacts."""
+        self._refresh_device_tree()
         changed = []
         for s in self.sources:
             snap = s.publish_window()
@@ -609,6 +704,7 @@ class ProfilerDaemon:
             "degraded_stackdefs": sum(s.degraded_stackdefs for s in srcs),
             "n_targets": len(srcs),
             "watch": self.cfg.watch_dir,
+            "device_plane": self._device_tree is not None,
             "targets": {s.name: s.status_row() for s in srcs},
             "hot_paths": [
                 {"path": list(p), "share": round(s, 4)}

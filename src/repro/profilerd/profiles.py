@@ -16,6 +16,7 @@ import os
 
 TIMELINE_DIRNAME = "timeline"
 TARGETS_DIRNAME = "targets"  # multi-target daemon: per-target artifact dirs
+DEVICE_TREE_FILENAME = "device_tree.json"  # device-plane artifact beside a profile
 
 
 class ProfileLoadError(RuntimeError):
@@ -120,6 +121,40 @@ def target_profile_dir(path: str, name: str):
     """The per-target profile dir behind a fleet out dir, or None."""
     sub = os.path.join(path, TARGETS_DIRNAME, name)
     return sub if name in list_profile_targets(path) else None
+
+
+def device_tree_path(path: str, target: str | None = None):
+    """Resolve the ``device_tree.json`` artifact beside a profile, or None.
+
+    A profile dir holds it directly; a per-target dir under ``targets/<name>/``
+    holds a target-specific one, falling back to the fleet-level artifact (all
+    co-located targets run the same compiled program); a ``tree.json``/
+    ``.snap`` file has it as a sibling.
+    """
+    if os.path.isdir(path):
+        if target:
+            p = os.path.join(path, TARGETS_DIRNAME, target, DEVICE_TREE_FILENAME)
+            if os.path.exists(p):
+                return p
+        p = os.path.join(path, DEVICE_TREE_FILENAME)
+        return p if os.path.exists(p) else None
+    p = os.path.join(os.path.dirname(path) or ".", DEVICE_TREE_FILENAME)
+    return p if os.path.exists(p) else None
+
+
+def load_device_plane(path: str, target: str | None = None):
+    """The device-plane CallTree beside a profile: None when absent, raises
+    :class:`ProfileLoadError` when present but unreadable (never a vacuous
+    empty tree — the plane contract mirrors the no-match marker contract)."""
+    from repro.core.hlo_tree import load_device_tree
+
+    p = device_tree_path(path, target)
+    if p is None:
+        return None
+    try:
+        return load_device_tree(p)
+    except (OSError, ValueError, KeyError) as e:
+        raise ProfileLoadError(f"{p}: unreadable device tree: {e}") from None
 
 
 def timeline_dir_of(path: str):

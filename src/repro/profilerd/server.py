@@ -49,11 +49,21 @@ from repro.core.export import (
     export_tree,
     prepare_view,
 )
+from repro.core.planes import (
+    OCCUPANCY,
+    PLANES,
+    PlaneError,
+    default_metric,
+    dominant_term,
+    select_plane,
+)
 from repro.core.report import ViewConfig, render_diff
 
 from .profiles import (
     ProfileLoadError,
+    device_tree_path,
     list_profile_targets,
+    load_device_plane,
     load_profile,
     profile_mtime,
     target_profile_dir,
@@ -80,6 +90,7 @@ class SharedProfileState:
         self._status: dict = {}
         self._tree: Optional[CallTree] = None
         self._targets: dict[str, CallTree] = {}
+        self._device_tree: Optional[CallTree] = None
 
     def update(
         self,
@@ -93,6 +104,18 @@ class SharedProfileState:
                 self._tree = tree
             if targets is not None:
                 self._targets = dict(targets)
+
+    def set_device_tree(self, tree: Optional[CallTree]) -> None:
+        """The daemon's device-plane artifact (one per fleet: co-located
+        targets run the same compiled program).  Set once at startup; the
+        tree is never mutated afterwards, so readers share it lock-free
+        after the swap."""
+        with self._lock:
+            self._device_tree = tree
+
+    def device_tree(self) -> Optional[CallTree]:
+        with self._lock:
+            return self._device_tree
 
     def snapshot(self) -> tuple[dict, CallTree]:
         with self._lock:
@@ -146,6 +169,11 @@ class LiveSource:
         rows = status.get("targets") or {}
         return [{"name": name, **row} for name, row in sorted(rows.items())]
 
+    def device_tree(self, target: Optional[str] = None) -> Optional[CallTree]:
+        # One device artifact per fleet: every co-located target runs the
+        # same compiled program, so the per-target plane is the fleet plane.
+        return self.shared.device_tree()
+
     def timeline_dir(self, target: Optional[str] = None) -> Optional[str]:
         if target is None:
             return self._timeline_dir
@@ -167,6 +195,7 @@ class OfflineSource:
         self.label = label or profile_path
         self._cached: Optional[CallTree] = None
         self._cached_mtime = -1.0
+        self._device_cache: dict[str, tuple[float, CallTree]] = {}
         self._target_sources: dict[str, "OfflineSource"] = {}
         self._lock = threading.Lock()
 
@@ -194,6 +223,26 @@ class OfflineSource:
                 self._cached = load_profile(self.path)
                 self._cached_mtime = mtime
             return self._cached
+
+    def device_tree(self, target: Optional[str] = None) -> Optional[CallTree]:
+        """The ``device_tree.json`` beside the profile, mtime-cached per
+        resolved path (a per-target dir falls back to the fleet artifact)."""
+        p = device_tree_path(self.path, target)
+        if p is None:
+            return None
+        try:
+            mtime = os.path.getmtime(p)
+        except OSError:
+            return None
+        with self._lock:
+            cached = self._device_cache.get(p)
+            if cached is not None and cached[0] >= mtime:
+                return cached[1]
+        tree = load_device_plane(self.path, target)
+        if tree is not None:
+            with self._lock:
+                self._device_cache[p] = (mtime, tree)
+        return tree
 
     def targets(self) -> list[dict]:
         rows = []
@@ -309,9 +358,9 @@ class _Handler(BaseHTTPRequestHandler):
             "  /status                         live daemon status (or offline summary)\n"
             "  /targets                        per-target status rows (multi-target daemon)\n"
             "  /tree?fmt=csv|folded|speedscope|html|json&view=NAME&target=NAME\n"
-            "       &metric=samples&root=SUBSTR&level=N&min_share=F\n"
+            "       &plane=host|device|merged&metric=samples&root=SUBSTR&level=N&min_share=F\n"
             "  /timeline?fmt=text|json&metric=samples&target=NAME\n"
-            "  /diff?baseline=PATH&fmt=text|html&metric=samples\n"
+            "  /diff?baseline=PATH&fmt=text|html&plane=host|device|merged&metric=samples\n"
         )
 
     def _targets(self) -> str:
@@ -319,7 +368,7 @@ class _Handler(BaseHTTPRequestHandler):
         rows = source.targets() if hasattr(source, "targets") else []
         return json.dumps({"targets": rows}, indent=1)
 
-    def _baseline_tree(self, path: str) -> CallTree:
+    def _baseline_source(self, path: str) -> "OfflineSource":
         """Baseline profiles get the same mtime cache as the served profile —
         a 2s /diff poller must not re-decode a timeline ring every tick."""
         cache = self.server._baseline_sources
@@ -328,7 +377,7 @@ class _Handler(BaseHTTPRequestHandler):
             if len(cache) >= 16:  # a loopback operator can name many paths
                 cache.clear()
             src = cache[path] = OfflineSource(path)
-        return src.tree()
+        return src
 
     def _loopback(self) -> bool:
         host = self.server.server_address[0]
@@ -366,29 +415,58 @@ class _Handler(BaseHTTPRequestHandler):
         except ValueError as e:
             raise _HTTPError(400, f"bad view parameters: {e}") from None
 
+    def _plane_of(self, q: dict) -> str:
+        plane = _one(q, "plane", "host") or "host"
+        if plane not in PLANES:
+            raise _HTTPError(400, f"unknown plane {plane!r}; choose from {', '.join(PLANES)}")
+        return plane
+
+    def _plane_tree(self, tree: CallTree, plane: str, target: Optional[str]) -> CallTree:
+        """Resolve the requested plane over a host tree from our source.
+
+        A missing device artifact is a 404 with the remedy hint (the plane
+        exists, this profile just lacks the artifact); a source that predates
+        device planes entirely behaves the same as one without the artifact.
+        """
+        if plane == "host":
+            return tree
+        source = self.server.source
+        getter = getattr(source, "device_tree", None)
+        device = getter(target) if getter is not None else None
+        try:
+            return select_plane(tree, device, plane, profile=getattr(source, "path", None))
+        except PlaneError as e:
+            raise _HTTPError(404, str(e)) from None
+
     def _tree(self, q: dict) -> tuple[str, str]:
         fmt = _one(q, "fmt", "csv")
         if fmt not in EXPORT_FORMATS:
             raise _HTTPError(400, f"unknown fmt {fmt!r}; choose from {', '.join(EXPORT_FORMATS)}")
+        plane = self._plane_of(q)
         view = self._view_from_query(q)
         target = _one(q, "target")
         tree = self.server.source.tree(target) if target else self.server.source.tree()
+        tree = self._plane_tree(tree, plane, target)
+        metric = default_metric(plane, _one(q, "metric"))
+        roofline = plane == "merged" and fmt == "html"
         label = self.server.source.label
         if target:
             label = f"{label} [{target}]"
+        if plane != "host":
+            label = f"{label} [{plane} plane]"
         if fmt == "csv":
             # The CSV body carries its own marker rows; serve it as-is.
-            return export_tree(tree, "csv", view=view, metric=_one(q, "metric"), title=label), CONTENT_TYPES["csv"]
+            return export_tree(tree, "csv", view=view, metric=metric, title=label), CONTENT_TYPES["csv"]
         # The stack-shaped formats would ship a silent empty payload — fail
         # loudly instead (the no-vacuous-empty-artifact contract, HTTP
         # edition).  prepare_view applies zoom/filters/level/min_share once
         # and owns every emptiness verdict, including fmt stacklessness.
-        applied, metric, marker = prepare_view(tree, view, _one(q, "metric"), fmt=fmt)
+        applied, metric, marker = prepare_view(tree, view, metric, fmt=fmt)
         if marker is not None:
             raise _HTTPError(404, marker.lstrip("# "))
         if view is not None:
             label = f"{label} [{view.name}]"
-        body = export_tree(applied, fmt, metric=metric, title=label)
+        body = export_tree(applied, fmt, metric=metric, title=label, roofline=roofline)
         return body, CONTENT_TYPES[fmt]
 
     def _read_timeline(self, tdir: str) -> list:
@@ -480,9 +558,22 @@ class _Handler(BaseHTTPRequestHandler):
                 "?baseline= paths are only honored on a loopback bind; "
                 "start the server with --baseline to diff on this host",
             )
-        baseline = self._baseline_tree(baseline_path)
+        plane = self._plane_of(q)
+        baseline_src = self._baseline_source(baseline_path)
+        baseline = baseline_src.tree()
         current = self.server.source.tree()
-        metric = _one(q, "metric", "samples") or "samples"
+        if plane != "host":
+            # Each side resolves the plane through its *own* device artifact;
+            # a device-plane diff with either side missing must fail loudly,
+            # not silently degrade to a host-only comparison.
+            try:
+                baseline = select_plane(
+                    baseline, baseline_src.device_tree(), plane, profile=baseline_path
+                )
+            except PlaneError as e:
+                raise _HTTPError(404, f"baseline: {e}") from None
+            current = self._plane_tree(current, plane, None)
+        metric = default_metric(plane, _one(q, "metric")) or "samples"
         fmt = _one(q, "fmt", "text")
         if fmt == "html":
             title = f"{os.path.basename(baseline_path.rstrip(os.sep)) or baseline_path} vs {self.server.source.label}"
@@ -572,6 +663,44 @@ def fetch_status(base_url: str, timeout: float = 5.0) -> dict:
         return json.loads(resp.read().decode("utf-8"))
 
 
+def fetch_plane_tree(base_url: str, plane: str, timeout: float = 5.0) -> tuple[int, str]:
+    """``(http_code, body)`` for ``/tree?fmt=json&plane=...`` — the 404 body
+    is the server's remedy hint and is worth showing verbatim."""
+    import urllib.error
+    import urllib.request
+
+    url = base_url.rstrip("/") + f"/tree?fmt=json&plane={plane}"
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return 200, resp.read().decode("utf-8")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode("utf-8", errors="replace")
+
+
+def render_plane_rows(tree: CallTree, plane: str, k: int = 10) -> str:
+    """The `top --plane` table: hottest paths with their roofline columns.
+
+    The device plane ranks by flops (it has no samples); merged ranks by
+    samples like the host view, with each path's annotated occupancy and
+    dominant roofline term alongside.
+    """
+    metric = default_metric(plane, None) or "samples"
+    lines = [f"{'SHARE':>8} {'ROOF-OCC':>9} {'BOUND':<11} HOTTEST PATHS [{plane} plane, {metric}]"]
+    for path, share in tree.hot_paths(metric, k=k):
+        node = tree.root
+        for name in path:
+            node = node.children.get(name)
+            if node is None:
+                break
+        occ = node.metrics.get(OCCUPANCY) if node is not None else None
+        term = dominant_term(node.metrics) if node is not None else None
+        occ_s = f"{occ:9.2%}" if occ is not None else f"{'--':>9}"
+        lines.append(f"{share:8.2%} {occ_s} {term or '--':<11} {'/'.join(path)}")
+    if len(lines) == 1:
+        lines.append(f"      --        --  (no {metric} in this plane yet)")
+    return "\n".join(lines)
+
+
 def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
     """One refresh of the hottest paths + verdicts, `top(1)`-style."""
     if status.get("offline"):
@@ -626,8 +755,15 @@ def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
     return "\n".join(lines)
 
 
-def top_loop(base_url: str, interval_s: float = 2.0, k: int = 10, once: bool = False) -> int:
-    """Poll ``/status`` and redraw; returns an exit code (1 = unreachable)."""
+def top_loop(
+    base_url: str,
+    interval_s: float = 2.0,
+    k: int = 10,
+    once: bool = False,
+    plane: str = "host",
+) -> int:
+    """Poll ``/status`` and redraw; returns an exit code (1 = unreachable,
+    4 = the requested plane has no device artifact behind this server)."""
     while True:
         try:
             status = fetch_status(base_url)
@@ -635,6 +771,16 @@ def top_loop(base_url: str, interval_s: float = 2.0, k: int = 10, once: bool = F
             print(f"[profilerd top] {base_url} unreachable: {e}")
             return 1
         frame = render_top(status, base_url, k=k)
+        if plane != "host":
+            code, body = fetch_plane_tree(base_url, plane)
+            if code == 404:
+                print(frame)
+                print(f"\n[profilerd top] {body.strip()}")
+                return 4
+            if code != 200:
+                print(f"[profilerd top] /tree?plane={plane} -> HTTP {code}: {body.strip()}")
+                return 1
+            frame += "\n\n" + render_plane_rows(CallTree.from_json(body), plane, k=k)
         if once:
             print(frame)
             return 0
