@@ -27,10 +27,28 @@ import shutil
 import threading
 from typing import Any, Callable, Optional
 
-import jax
 import numpy as np
 
+try:  # jax is only needed to materialize device arrays on host; a pure-numpy
+    import jax  # state tree (tests, fault scenarios) checkpoints without it.
+except ImportError:  # pragma: no cover - exercised in jax-free environments
+    jax = None
+
 _SEP = "."
+
+
+def _sync_path(path: str) -> None:
+    """fsync one written file to stable storage.
+
+    Module-level indirection on purpose: durability is where checkpoint
+    writes wedge in production (hung NFS/fuse mounts), so the fault corpus
+    (``repro.faults``) shims this symbol to reproduce a blocked-fsync save.
+    """
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree, prefix=()) -> dict[tuple, Any]:
@@ -55,9 +73,13 @@ def _unflatten(flat: dict[tuple, Any]) -> Any:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep: int = 3):
+    def __init__(self, directory: str, *, keep: int = 3, fsync: bool = False):
         self.directory = directory
         self.keep = keep
+        # fsync=True forces every leaf + manifest to stable storage before
+        # the rename — the durable mode whose blocking failure profile the
+        # fault corpus injects (see _sync_path).
+        self.fsync = fsync
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._pending: Optional[threading.Thread] = None
@@ -68,7 +90,8 @@ class CheckpointManager:
     def save(self, step: int, tree: Any, *, extra: Optional[dict] = None, blocking: bool = False, tag: str = "periodic") -> None:
         # Materialize on host *before* handing to the writer thread so the
         # train loop can donate/overwrite device buffers immediately.
-        flat = {k: np.asarray(v) for k, v in _flatten(jax.device_get(tree)).items()}
+        host_tree = jax.device_get(tree) if jax is not None else tree
+        flat = {k: np.asarray(v) for k, v in _flatten(host_tree).items()}
         manifest = {
             "step": int(step),
             "tag": tag,
@@ -83,9 +106,14 @@ class CheckpointManager:
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             for k, v in flat.items():
-                np.save(os.path.join(tmp, _SEP.join(k) + ".npy"), v)
+                leaf = os.path.join(tmp, _SEP.join(k) + ".npy")
+                np.save(leaf, v)
+                if self.fsync:
+                    _sync_path(leaf)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
+            if self.fsync:
+                _sync_path(os.path.join(tmp, "manifest.json"))
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)

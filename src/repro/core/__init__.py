@@ -17,6 +17,7 @@ _EXPORTS = {
     "CallTree": ".calltree",
     "AnomalyEvent": ".detector",
     "DominanceDetector": ".detector",
+    "LIVELOCK_CLEARED": ".detector",
     "Rule": ".detector",
     "StragglerDetector": ".detector",
     "TrendDetector": ".detector",

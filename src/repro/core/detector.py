@@ -25,6 +25,7 @@ warn+checkpoint flow while integrating with the launcher's restart policy.
 from __future__ import annotations
 
 import time
+import traceback
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Optional, Sequence
@@ -73,6 +74,12 @@ class DominanceDetector:
         self.rules = list(rules) if rules else [Rule()]
         self.callbacks: list[Callable[[AnomalyEvent], None]] = list(on_anomaly or [])
         self.events: list[AnomalyEvent] = []
+        # A verdict callback (warn/checkpoint/abort action) that raises must
+        # not take down the observer loop feeding it — the detector is exactly
+        # the component that has to survive a sick process.  Failures land
+        # here and, when set, in ``on_callback_error(event, traceback_str)``.
+        self.callback_failures: deque = deque(maxlen=32)
+        self.on_callback_error: Optional[Callable[[AnomalyEvent, str], None]] = None
         self._prev: Optional[CallTree] = None
         self._streaks: dict[int, int] = {}
         self._window = 0
@@ -106,13 +113,23 @@ class DominanceDetector:
                 fired.append(ev)
                 self.events.append(ev)
                 for cb in self.callbacks:
-                    cb(ev)
+                    try:
+                        cb(ev)
+                    except Exception:
+                        tb = traceback.format_exc()
+                        self.callback_failures.append((ev, tb))
+                        if self.on_callback_error is not None:
+                            try:
+                                self.on_callback_error(ev, tb)
+                            except Exception:
+                                pass  # the error sink must never recurse
         return fired
 
 
 LIVELOCK = "LIVELOCK"
 DOMINANT = "DOMINANT"
 SHARE_DRIFT = "SHARE_DRIFT"
+LIVELOCK_CLEARED = "LIVELOCK_CLEARED"
 
 
 def share_distance(a: Mapping[str, float], b: Mapping[str, float]) -> float:
@@ -173,12 +190,18 @@ class TrendRule:
 class TrendVerdict:
     """One epoch-trend finding, stamped with the epoch where it began."""
 
-    kind: str  # LIVELOCK | DOMINANT | SHARE_DRIFT
+    kind: str  # LIVELOCK | DOMINANT | SHARE_DRIFT | LIVELOCK_CLEARED
     path: tuple[str, ...]
     share: float  # dominant share, or TV distance for SHARE_DRIFT
     epoch: int
     began_epoch: int
     wall_time: float = field(default_factory=time.time)
+
+    @property
+    def latency_epochs(self) -> int:
+        """Epochs between the condition's onset and this verdict firing —
+        the detection latency the fault scoreboard grades."""
+        return max(0, self.epoch - self.began_epoch)
 
     def describe(self) -> str:
         what = "/".join(self.path) if self.path else "<distribution>"
@@ -202,6 +225,9 @@ class TrendDetector:
     * ``SHARE_DRIFT``— the window's share distribution moved more than
       ``drift_threshold`` (TV distance) away from the trailing
       ``baseline_window``-epoch mean, stamped with the first drifting epoch.
+    * ``LIVELOCK_CLEARED`` — a previously-reported LIVELOCK whose dominance
+      broke or whose progress resumed; without this transition a cleared
+      fault reads as permanently wedged, so recovery is first-class.
 
     Each distinct ``(kind, path, began_epoch)`` is reported once.
     """
@@ -215,8 +241,31 @@ class TrendDetector:
         self._dom_began = 0
         self._stall_began: Optional[int] = None
         self._drift_began: Optional[int] = None
+        self._livelock_active: Optional[tuple[tuple[str, ...], int]] = None
         self._baseline: deque = deque(maxlen=max(1, self.rule.baseline_window))
         self._emitted: set[tuple[str, tuple[str, ...], int]] = set()
+
+    # -- scoreboard accessors ------------------------------------------------
+
+    @property
+    def livelock_active(self) -> bool:
+        return self._livelock_active is not None
+
+    def detections(self, kind: Optional[str] = None) -> list[TrendVerdict]:
+        if kind is None:
+            return list(self.events)
+        return [v for v in self.events if v.kind == kind]
+
+    def first_detection(self, kind: str) -> Optional[TrendVerdict]:
+        for v in self.events:
+            if v.kind == kind:
+                return v
+        return None
+
+    def detection_latency(self, kind: str) -> Optional[int]:
+        """Epochs from onset to first verdict of ``kind`` (None if never)."""
+        v = self.first_detection(kind)
+        return None if v is None else v.latency_epochs
 
     def _emit(self, out: list[TrendVerdict], kind: str, path: tuple[str, ...], share: float, began: int, wall_time: float) -> None:
         key = (kind, path, began)
@@ -258,6 +307,14 @@ class TrendDetector:
         for path, share in shares.items():
             if share >= rule.threshold and (top is None or share > top[1]):
                 top = (path, share)
+        # Recovery first: an active LIVELOCK clears the moment its dominance
+        # breaks or progress resumes — stamped with the original onset epoch
+        # so time-wedged = cleared.epoch - cleared.began_epoch.
+        if self._livelock_active is not None:
+            lpath, lbegan = self._livelock_active
+            if self._stall_began is None or top is None or top[0] != lpath:
+                self._emit(out, LIVELOCK_CLEARED, lpath, shares.get(lpath, 0.0), lbegan, wall)
+                self._livelock_active = None
         if top is None:
             self._dom_path = None
         else:
@@ -269,6 +326,7 @@ class TrendDetector:
                 began = max(self._dom_began, self._stall_began)
                 if self._epoch - began + 1 >= rule.epochs:
                     self._emit(out, LIVELOCK, path, share, began, wall)
+                    self._livelock_active = (path, began)
                 else:
                     self._emit(out, DOMINANT, path, share, self._dom_began, wall)
             else:
@@ -296,17 +354,27 @@ class TrendDetector:
 
 class StragglerDetector:
     """Multi-host extension: flag hosts whose window tree diverges from the
-    fleet. Distance = total-variation distance between flattened share
-    vectors; a straggler burns its samples in a different place (e.g. a
-    collective-wait frame) than its peers."""
+    fleet. Distance = total-variation distance between *self*-share vectors
+    (flattened by frame name); a straggler burns its samples in a different
+    place (e.g. a collective-wait frame) than its peers.
+
+    Self shares, not inclusive: real stacks share a deep common prefix
+    (interpreter bootstrap, the train loop), and inclusive counters would let
+    that shared mass dilute any leaf-level divergence below threshold."""
 
     def __init__(self, threshold: float = 0.5, metric: str = SAMPLES):
         self.threshold = threshold
         self.metric = metric
 
     def _shares(self, tree: CallTree) -> dict[str, float]:
-        flat = tree.flatten(self.metric)
-        total = sum(v for v in flat.values()) or 1.0
+        flat: dict[str, float] = {}
+        for _path, node in tree.root.walk():
+            if node is tree.root:
+                continue
+            v = node.self_metrics.get(self.metric, 0.0)
+            if v:
+                flat[node.name] = flat.get(node.name, 0.0) + v
+        total = sum(flat.values()) or 1.0
         return {k: v / total for k, v in flat.items()}
 
     def observe(self, host_trees: dict[str, CallTree]) -> list[tuple[str, float]]:
@@ -338,6 +406,11 @@ class WatchdogLoop:
         self.sampler = sampler
         self.detector = detector
         self.interval_s = interval_s
+        # Observe-pass failures (sampler or detector internals) are recorded,
+        # never fatal: the watchdog's one job is to keep observing a process
+        # that is already misbehaving.  Callback failures are handled one
+        # level down by :class:`DominanceDetector` itself.
+        self.errors: deque = deque(maxlen=32)
         import threading
 
         self._stop = threading.Event()
@@ -345,7 +418,7 @@ class WatchdogLoop:
         self._threading = threading
 
     def start(self) -> "WatchdogLoop":
-        t = self._threading.Thread(target=self._run, name="repro-watchdog", daemon=True)
+        t = self._threading.Thread(target=self._run, name="repro-prof-watchdog", daemon=True)
         self._thread = t
         t.start()
         return self
@@ -355,7 +428,7 @@ class WatchdogLoop:
             try:
                 self.detector.observe(self.sampler.snapshot())
             except Exception:
-                pass
+                self.errors.append(traceback.format_exc())
 
     def stop(self) -> None:
         self._stop.set()

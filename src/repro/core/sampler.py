@@ -77,8 +77,11 @@ def frame_symbol(frame) -> str:
 
 # Threads whose names carry this prefix are profiler infrastructure (helper,
 # watchdog, agent) and are excluded from every backend's capture — part of
-# the "identical trees from identical frames" parity contract.
-PROFILER_THREAD_PREFIX = "repro-"
+# the "identical trees from identical frames" parity contract.  The prefix is
+# deliberately narrower than the framework's ``repro-`` convention: workload
+# threads like ``repro-data-prefetch`` and ``repro-ckpt-writer`` are part of
+# the program under observation and must stay visible in profiles.
+PROFILER_THREAD_PREFIX = "repro-prof"
 
 
 def is_profiler_thread(name: str) -> bool:

@@ -1,0 +1,57 @@
+"""Fault-injection corpus + scored detector harness.
+
+Measure the detectors the way the paper measures gem5: reproduce a known
+failure on demand, profile it from outside, and grade every detector on
+precision, recall, and time-to-detect against the injection's ground truth.
+
+Import surface stays lazy where it matters: the scenario registry and
+scoreboard are import-light; heavyweight drivers (jax models) only load
+inside the child process that runs them.
+
+  PYTHONPATH=src python -m repro.faults list
+  PYTHONPATH=src python -m repro.faults run --scenario injected_spin
+  PYTHONPATH=src python -m repro.faults bench --smoke --out BENCH_detect.json
+"""
+
+from .base import Driver, FaultScenario, ScenarioContext
+from .harness import HarnessConfig, HarnessError, RunResult, run_scenario
+from .scenarios import SCENARIOS, SMOKE_SCENARIOS
+from .scoreboard import (
+    DETECTOR_COLUMNS,
+    CellScore,
+    build_bench,
+    detector_of,
+    diff_bench,
+    floor_report,
+    score_runs,
+)
+
+
+def get_scenario(name: str) -> FaultScenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; have: {', '.join(sorted(SCENARIOS))}"
+        ) from None
+
+
+__all__ = [
+    "Driver",
+    "FaultScenario",
+    "ScenarioContext",
+    "HarnessConfig",
+    "HarnessError",
+    "RunResult",
+    "run_scenario",
+    "SCENARIOS",
+    "SMOKE_SCENARIOS",
+    "DETECTOR_COLUMNS",
+    "CellScore",
+    "build_bench",
+    "detector_of",
+    "diff_bench",
+    "floor_report",
+    "score_runs",
+    "get_scenario",
+]

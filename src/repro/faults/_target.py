@@ -1,0 +1,88 @@
+"""Child-process entrypoint: run one fault-scenario driver under an Agent.
+
+The harness spawns one of these per simulated host.  The child builds the
+scenario's driver, warms it up (compiles jax, primes pipelines) *before*
+starting the profiling agent — so the published profile is the steady-state
+workload, not startup — then loops ``driver.step()`` until the harness drops
+a ``stop`` sentinel in the control directory.
+
+Control protocol (files in ``--ctl``):
+  harness -> child:  ``inject``, ``clear``, ``stop`` (touched once, in order)
+  child -> harness:  ``ready.<host_index>`` (written after the agent starts)
+
+The control poller runs on a thread named ``repro-prof-faults-ctl`` so the
+sampler excludes it from profiles — the ground-truth machinery must never
+appear in the data being scored.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+
+from repro.faults.base import ScenarioContext
+from repro.faults.scenarios import SCENARIOS
+from repro.profilerd.agent import Agent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.faults._target")
+    ap.add_argument("--scenario", required=True)
+    ap.add_argument("--spool", required=True)
+    ap.add_argument("--ctl", required=True)
+    ap.add_argument("--workdir", required=True)
+    ap.add_argument("--host-index", type=int, default=0)
+    ap.add_argument("--n-hosts", type=int, default=1)
+    ap.add_argument("--period", type=float, default=0.004)
+    args = ap.parse_args(argv)
+
+    scenario = SCENARIOS[args.scenario]
+    ctx = ScenarioContext(args.host_index, args.n_hosts, args.workdir)
+    driver = scenario.make_driver(ctx)
+    driver.warmup()
+
+    stop = threading.Event()
+    driver.stop_event = stop  # drivers with blocking waits bail on shutdown
+
+    def poll_ctl() -> None:
+        seen: set[str] = set()
+        while not stop.is_set():
+            for op in ("inject", "clear", "stop"):
+                if op in seen or not os.path.exists(os.path.join(args.ctl, op)):
+                    continue
+                seen.add(op)
+                if op == "inject":
+                    driver.inject()
+                elif op == "clear":
+                    driver.clear()
+                else:
+                    stop.set()
+                    return
+            time.sleep(0.02)
+
+    poller = threading.Thread(target=poll_ctl, name="repro-prof-faults-ctl", daemon=True)
+
+    agent = Agent(args.spool, period_s=args.period)
+    agent.start()
+    poller.start()
+    # Ready only after the agent is live: the harness's daemon attach then
+    # finds a spool with a HELLO already in it.
+    ready = os.path.join(args.ctl, f"ready.{args.host_index}")
+    with open(ready + ".tmp", "w") as f:
+        f.write(str(os.getpid()))
+    os.rename(ready + ".tmp", ready)
+
+    try:
+        while not stop.is_set():
+            driver.step()
+    finally:
+        driver.close()
+        agent.stop()  # writes BYE so the daemon sees a clean detach
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

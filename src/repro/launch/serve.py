@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -44,6 +45,39 @@ class Request:
     done: bool = False
 
 
+class ServeMetrics:
+    """Serving counters shared between the decode loop and scrapers.
+
+    One lock guards the counters: the decode loop takes it once per step
+    (`record_step`), dashboards/scrapers take it to read (`snapshot`).  That
+    makes this the serving loop's lock-convoy seam — a scraper that holds the
+    lock too long parks the decode thread in ``record_step``, which is
+    exactly the contention profile the fault corpus injects and the
+    profiler's dominance rules are scored on.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.steps = 0
+        self.requests_done = 0
+        self.step_wall_s = 0.0
+
+    def record_step(self, *, done_now: int, wall_s: float) -> None:
+        with self._lock:
+            self.steps += 1
+            self.requests_done += done_now
+            self.step_wall_s += wall_s
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            mean = self.step_wall_s / self.steps if self.steps else 0.0
+            return {
+                "steps": self.steps,
+                "requests_done": self.requests_done,
+                "mean_step_s": mean,
+            }
+
+
 class BatchedServer:
     def __init__(self, model: Model, *, batch: int = 4, max_len: int = 128, seed: int = 0):
         self.model = model
@@ -57,6 +91,7 @@ class BatchedServer:
         self.consumed = [0] * batch
         self.pos = 0
         self.steps = 0
+        self.metrics = ServeMetrics()
 
     def _admit(self, queue: list[Request]) -> None:
         for i in range(self.batch):
@@ -70,6 +105,7 @@ class BatchedServer:
         self._admit(queue)
         vocab = self.model.cfg.vocab
         while any(s is not None for s in self.slots) or queue:
+            t_step = time.time()
             tokens = np.zeros((self.batch, 1), np.int32)
             for i, req in enumerate(self.slots):
                 if req is None:
@@ -84,6 +120,7 @@ class BatchedServer:
             next_tok = np.asarray(next_tok)
             self.pos += 1
             self.steps += 1
+            done_before = sum(1 for r in requests if r.done)
             for i, req in enumerate(self.slots):
                 if req is None:
                     continue
@@ -95,6 +132,10 @@ class BatchedServer:
                     req.done = True
                     self.slots[i] = None
                     self._admit(queue)
+            self.metrics.record_step(
+                done_now=sum(1 for r in requests if r.done) - done_before,
+                wall_s=time.time() - t_step,
+            )
             if self.pos >= self.max_len - 1:
                 break  # context exhausted for this demo server
         wall = time.time() - t0
@@ -105,6 +146,7 @@ class BatchedServer:
             "wall_s": wall,
             "steps_per_s": self.steps / max(wall, 1e-9),
             "batch": self.batch,
+            "metrics": self.metrics.snapshot(),
         }
 
 

@@ -50,10 +50,10 @@ import json
 import os
 import sys
 
-from repro.core.detector import Rule
+from repro.core.detector import Rule, TrendRule
 from repro.core.planes import PLANES, PlaneError, default_metric, select_plane
 
-from .daemon import DaemonConfig, ProfilerDaemon
+from .daemon import DaemonConfig, ProfilerDaemon, rule_from_spec
 from .profiles import TIMELINE_DIRNAME, ProfileLoadError, load_device_plane, load_profile
 from .spool import SpoolError
 
@@ -92,6 +92,21 @@ def cmd_attach(args) -> int:
               file=sys.stderr)
         return 2
     rules = [Rule(threshold=args.threshold, consecutive=args.consecutive)]
+    for spec in args.rule or ():
+        try:
+            rules.append(rule_from_spec(spec))
+        except ValueError as e:
+            print(f"[profilerd] {e}", file=sys.stderr)
+            return 2
+    trend_rule = None
+    if args.trend_threshold is not None or args.trend_epochs is not None or args.trend_drift is not None:
+        trend_rule = TrendRule()
+        if args.trend_threshold is not None:
+            trend_rule.threshold = args.trend_threshold
+        if args.trend_epochs is not None:
+            trend_rule.epochs = args.trend_epochs
+        if args.trend_drift is not None:
+            trend_rule.drift_threshold = args.trend_drift
     cfg = DaemonConfig(
         spool_path=args.spool,
         spool_paths=targets,
@@ -100,6 +115,7 @@ def cmd_attach(args) -> int:
         publish_interval_s=args.interval,
         collapse_origins=tuple(o for o in (args.collapse or "").split(",") if o),
         rules=rules,
+        trend_rule=trend_rule,
         stall_timeout_s=args.stall_timeout,
         attach_timeout_s=args.attach_timeout,
         max_seconds=args.max_seconds,
@@ -427,6 +443,15 @@ def main(argv=None) -> int:
     at.add_argument("--collapse", default="", help="comma-separated origins to fold (e.g. py,jax)")
     at.add_argument("--threshold", type=float, default=0.9, help="dominance-rule threshold")
     at.add_argument("--consecutive", type=int, default=2, help="windows before a rule fires")
+    at.add_argument("--rule", action="append", default=[], metavar="SPEC",
+                    help="extra dominance rule, repeatable: "
+                         "pattern=P,threshold=T,consecutive=N,kind=K,self_only=0|1")
+    at.add_argument("--trend-threshold", type=float, default=None,
+                    help="epoch-trend dominance threshold (default 0.9)")
+    at.add_argument("--trend-epochs", type=int, default=None,
+                    help="stalled-dominance epochs before LIVELOCK (default 3)")
+    at.add_argument("--trend-drift", type=float, default=None,
+                    help="SHARE_DRIFT TV-distance threshold (default 0.35)")
     at.add_argument("--stall-timeout", type=float, default=5.0,
                     help="seconds of silence from a live target before TARGET_STALLED")
     at.add_argument("--attach-timeout", type=float, default=30.0)

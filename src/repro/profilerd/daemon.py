@@ -41,10 +41,63 @@ from repro.core.detector import Rule, TrendRule
 from repro.core.snapshot import EpochMeta, TimelineWriter
 
 from .profiles import DEVICE_TREE_FILENAME, TARGETS_DIRNAME, TIMELINE_DIRNAME
-from .sources import STALLED, SpoolSet, SpoolSource, _pid_alive, source_name_for
+from .sources import RESUMED, STALLED, SpoolSet, SpoolSource, _pid_alive, source_name_for
 from .spool import SpoolError, SpoolReader, _ShortHeader
 
-__all__ = ["STALLED", "DaemonConfig", "ProfilerDaemon", "spawn_attached_daemon"]
+__all__ = [
+    "STALLED",
+    "RESUMED",
+    "DaemonConfig",
+    "ProfilerDaemon",
+    "rule_from_spec",
+    "rule_to_spec",
+    "spawn_attached_daemon",
+]
+
+FAULT_MARKERS_FILENAME = "fault_markers.jsonl"
+
+
+def rule_to_spec(rule: Rule) -> str:
+    """Serialize a dominance rule for the ``attach --rule`` flag."""
+    return (
+        f"pattern={rule.pattern},threshold={rule.threshold},"
+        f"consecutive={rule.consecutive},kind={rule.kind},"
+        f"self_only={int(rule.self_only)},min_window={rule.min_window_total}"
+    )
+
+
+def rule_from_spec(spec: str) -> Rule:
+    """Parse ``key=value[,key=value...]`` into a :class:`Rule`.
+
+    Keys: pattern, threshold, consecutive, kind, self_only (0/1),
+    min_window.  Unknown keys raise — a typo'd rule must fail loudly, not
+    silently detect nothing.
+    """
+    rule = Rule()
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        key, sep, value = part.partition("=")
+        if not sep:
+            raise ValueError(f"bad --rule field {part!r} (want key=value)")
+        key = key.strip()
+        value = value.strip()
+        if key == "pattern":
+            rule.pattern = value
+        elif key == "threshold":
+            rule.threshold = float(value)
+        elif key == "consecutive":
+            rule.consecutive = int(value)
+        elif key == "kind":
+            rule.kind = value
+        elif key == "self_only":
+            rule.self_only = bool(int(value))
+        elif key == "min_window":
+            rule.min_window_total = float(value)
+        else:
+            raise ValueError(f"unknown --rule key {key!r}")
+    return rule
 
 
 def spawn_attached_daemon(
@@ -60,6 +113,10 @@ def spawn_attached_daemon(
     serve_port: Optional[int] = None,
     exit_with_pid: Optional[int] = None,
     device_tree: Optional[str] = None,
+    rules: Sequence[Rule] = (),
+    trend_rule: Optional[TrendRule] = None,
+    threshold: Optional[float] = None,
+    consecutive: Optional[int] = None,
     cwd: Optional[str] = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
@@ -100,6 +157,18 @@ def spawn_attached_daemon(
         cmd += ["--exit-with", str(exit_with_pid)]
     if device_tree is not None:
         cmd += ["--device-tree", device_tree]
+    if threshold is not None:
+        cmd += ["--threshold", str(threshold)]
+    if consecutive is not None:
+        cmd += ["--consecutive", str(consecutive)]
+    for rule in rules:
+        cmd += ["--rule", rule_to_spec(rule)]
+    if trend_rule is not None:
+        cmd += [
+            "--trend-threshold", str(trend_rule.threshold),
+            "--trend-epochs", str(trend_rule.epochs),
+            "--trend-drift", str(trend_rule.drift_threshold),
+        ]
     return subprocess.Popen(
         cmd, cwd=cwd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL
     )
@@ -122,6 +191,17 @@ class DaemonConfig:
     # No fresh samples for this long while the target is alive => stalled.
     stall_timeout_s: float = 5.0
     attach_timeout_s: float = 30.0
+    # Attach-failure retry policy (SpoolSet backoff): exponential with jitter
+    # from base to cap, then a terminal SOURCE_GAVE_UP after max attempts.
+    attach_retry_base_s: float = 0.5
+    attach_retry_cap_s: float = 30.0
+    attach_max_attempts: int = 8
+    # Multi-target straggler detection: a host whose publish-window share
+    # vector diverges from the merged fleet by >= threshold (TV distance)
+    # for `consecutive` windows earns a STRAGGLER event.
+    straggler_threshold: float = 0.5
+    straggler_consecutive: int = 2
+    straggler_min_window: float = 8.0
     max_seconds: Optional[float] = None  # bound the run (tests/benchmarks)
     hot_k: int = 10
     timeline_cap: int = 2048
@@ -197,6 +277,9 @@ class ProfilerDaemon:
             watch_dir=cfg.watch_dir,
             watch_glob=cfg.watch_glob,
             make_source=self._make_source,
+            attach_retry_base_s=cfg.attach_retry_base_s,
+            attach_retry_cap_s=cfg.attach_retry_cap_s,
+            attach_max_attempts=cfg.attach_max_attempts,
         )
         # Device plane: loaded from cfg.device_tree or discovered beside the
         # out dir once a target drops its artifact (see _refresh_device_tree).
@@ -231,6 +314,18 @@ class ProfilerDaemon:
         self._stop_requested = False
         self._attach_errors: dict[str, str] = {}
         self._last_attach_error: Optional[SpoolError] = None
+        # Fault-window markers: a harness (repro.faults) appends inject/clear
+        # lines to <out>/fault_markers.jsonl; the daemon tails the file and
+        # threads each marker into the event log stamped with the current
+        # epoch counters, so scoring can align verdicts to injections.
+        self._fault_marker_offset = 0
+        self._fault_marker_buf = b""
+        # Multi-target straggler detection over publish-window deltas.
+        from repro.core.detector import StragglerDetector
+
+        self._straggler = StragglerDetector(threshold=cfg.straggler_threshold)
+        self._straggler_prev: dict[str, CallTree] = {}
+        self._straggler_streaks: dict[str, int] = {}
         self._t_start = time.monotonic()
 
     # -- compatibility surface (classic single-target attributes) ------------
@@ -284,11 +379,30 @@ class ProfilerDaemon:
         self._record_event(
             {
                 "kind": ev.kind,
+                "detector": "dominance",
                 "target": target,
                 "path": list(ev.path),
                 "share": ev.share,
+                "rule_pattern": ev.rule.pattern,
                 "window": ev.window_index,
                 "wall_time": ev.wall_time,
+            }
+        )
+
+    def _on_callback_failed(self, ev, tb: str, target: str) -> None:
+        # A poisoned verdict action (warn/checkpoint hook) is recorded and
+        # survived — the drain loop must keep sampling a sick process.
+        self._record_event(
+            {
+                "kind": "CALLBACK_FAILED",
+                "detector": "daemon",
+                "target": target,
+                "path": list(ev.path),
+                "share": ev.share,
+                "event_kind": ev.kind,
+                "error": tb.strip().splitlines()[-1] if tb.strip() else "",
+                "traceback": tb,
+                "wall_time": time.time(),
             }
         )
 
@@ -345,6 +459,9 @@ class ProfilerDaemon:
         self._attach_errors.pop(path, None)
         self._last_attach_error = None
         src.detector.add_callback(lambda ev, _n=name: self._on_anomaly(ev, _n))
+        src.detector.on_callback_error = (
+            lambda ev, tb, _n=name: self._on_callback_failed(ev, tb, _n)
+        )
         if not self.solo:
             os.makedirs(self._target_dir(name), exist_ok=True)
             self._record_event(
@@ -364,6 +481,7 @@ class ProfilerDaemon:
         deadline = time.monotonic() + self.cfg.attach_timeout_s
         while True:
             self.spools.discover()
+            self._drain_gave_up()
             if self.spools.sources:
                 break
             # A present-but-garbage spool should fail fast, not time out —
@@ -395,6 +513,8 @@ class ProfilerDaemon:
         source dry (round-robin bounded chunks).  Returns stacks ingested."""
         before = self.n_stacks
         self.spools.discover()
+        self._drain_gave_up()
+        self._poll_fault_markers()
         for s in self.sources:
             if s.maybe_reattach():
                 self._record_event(
@@ -404,6 +524,16 @@ class ProfilerDaemon:
                 )
         self.spools.drain_all()
         return self.n_stacks - before
+
+    def _drain_gave_up(self) -> None:
+        """Terminal SOURCE_GAVE_UP events for paths past the retry budget."""
+        for p in self.spools.gave_up_now:
+            self._record_event(
+                {"kind": "SOURCE_GAVE_UP", "target": source_name_for(p), "path": p,
+                 "attempts": self.cfg.attach_max_attempts,
+                 "error": self._attach_errors.get(p, ""), "wall_time": time.time()}
+            )
+        self.spools.gave_up_now.clear()
 
     def request_stop(self) -> None:
         """Ask the run loop to finalize (final drain + seal + publish) and
@@ -498,11 +628,13 @@ class ProfilerDaemon:
                 self._record_event(
                     {
                         "kind": v.kind,
+                        "detector": "trend",
                         "target": s.name,
                         "path": list(v.path),
                         "share": round(v.share, 4),
                         "epoch": v.epoch,
                         "began_epoch": v.began_epoch,
+                        "latency_epochs": v.latency_epochs,
                         "wall_time": v.wall_time,
                     }
                 )
@@ -543,9 +675,102 @@ class ProfilerDaemon:
 
     def _check_stalls(self) -> None:
         for s in self.sources:
+            if s.resumed_pending:
+                s.resumed_pending = False
+                self._record_event(
+                    {"kind": RESUMED, "detector": "stall", "target": s.name,
+                     "path": [], "share": 0.0, "pid": s.target_pid,
+                     "wall_time": time.time()}
+                )
             ev = s.check_stall(self.cfg.stall_timeout_s)
             if ev is not None:
                 self._record_event(ev)
+
+    def _check_stragglers(self, changed: list) -> None:
+        """Flag hosts whose publish-window activity diverges from the fleet.
+
+        Windows are per-source deltas since this check last saw the source;
+        the detector needs at least two busy hosts to define "the fleet".
+        A host fires once per divergence streak (at `straggler_consecutive`),
+        re-arming when it rejoins the fleet's profile.
+        """
+        if self.solo:
+            return
+        windows: dict[str, CallTree] = {}
+        for s, snap in changed:
+            prev = self._straggler_prev.get(s.name)
+            win = snap.diff(prev) if prev is not None else snap
+            self._straggler_prev[s.name] = snap
+            if win.total() >= self.cfg.straggler_min_window:
+                windows[s.name] = win
+        if len(windows) < 2:
+            return
+        flagged = dict(self._straggler.observe(windows))
+        for name in windows:
+            if name not in flagged:
+                self._straggler_streaks.pop(name, None)
+        for name, tv in flagged.items():
+            streak = self._straggler_streaks.get(name, 0) + 1
+            self._straggler_streaks[name] = streak
+            if streak == self.cfg.straggler_consecutive:
+                self._record_event(
+                    {"kind": "STRAGGLER", "detector": "straggler", "target": name,
+                     "path": [], "share": round(tv, 4), "peers": len(windows),
+                     "wall_time": time.time()}
+                )
+
+    def _poll_fault_markers(self) -> None:
+        """Tail <out>/fault_markers.jsonl into FAULT_* timeline events.
+
+        Each marker line ({"op": "inject"|"clear", "scenario": ..., ...}) is
+        stamped with the daemon's *current* epoch counters at ingest time —
+        the ground-truth alignment the fault scoreboard scores against.
+        """
+        path = os.path.join(self.out_dir, FAULT_MARKERS_FILENAME)
+        try:
+            with open(path, "rb") as f:
+                f.seek(self._fault_marker_offset)
+                data = f.read()
+        except OSError:
+            return
+        if not data:
+            return
+        self._fault_marker_offset += len(data)
+        self._fault_marker_buf += data
+        *lines, self._fault_marker_buf = self._fault_marker_buf.split(b"\n")
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                marker = json.loads(line)
+                op = marker["op"]
+            except (ValueError, TypeError, KeyError):
+                self._record_event(
+                    {"kind": "FAULT_MARKER_INVALID", "detector": "daemon",
+                     "line": line.decode("utf-8", "replace")[:200],
+                     "wall_time": time.time()}
+                )
+                continue
+            solo_src = self._solo_source()
+            self._record_event(
+                {
+                    "kind": "FAULT_INJECT" if op == "inject" else "FAULT_CLEAR",
+                    "detector": "harness",
+                    "scenario": marker.get("scenario", ""),
+                    "op": op,
+                    "epoch": (
+                        solo_src.sealer.epoch
+                        if self.solo and solo_src is not None and solo_src.sealer is not None
+                        else self._fleet_epoch
+                    ),
+                    "target_epochs": {
+                        s.name: s.sealer.epoch for s in self.sources if s.sealer is not None
+                    },
+                    "marker_wall_time": marker.get("wall_time"),
+                    "wall_time": time.time(),
+                }
+            )
 
     def enable_serving(self, port: Optional[int] = None, host: Optional[str] = None):
         """Start the HTTP query plane over this daemon's published state.
@@ -614,6 +839,7 @@ class ProfilerDaemon:
         if fleet_snap is not None:
             self.windows.append((time.time(), fleet_snap))
         self._check_stalls()
+        self._check_stragglers(changed)
         status = self.status()
         if self.shared is not None:
             # Snapshots are never mutated after this point; handlers may read
@@ -704,6 +930,10 @@ class ProfilerDaemon:
             "degraded_stackdefs": sum(s.degraded_stackdefs for s in srcs),
             "n_targets": len(srcs),
             "watch": self.cfg.watch_dir,
+            "attach_failures": [
+                dict(row, error=self._attach_errors.get(row["path"], ""))
+                for row in self.spools.attach_failure_rows()
+            ],
             "device_plane": self._device_tree is not None,
             "targets": {s.name: s.status_row() for s in srcs},
             "hot_paths": [

@@ -69,6 +69,7 @@ from .profiles import (
     target_profile_dir,
     timeline_dir_of,
 )
+from .sources import source_name_for
 
 DEFAULT_MAX_BYTES = 16 << 20  # bound any single response body
 MAX_TIMELINE_EPOCHS = 512  # newest epochs served; older ones need the ring
@@ -167,7 +168,23 @@ class LiveSource:
     def targets(self) -> list[dict]:
         status, _ = self.shared.snapshot()
         rows = status.get("targets") or {}
-        return [{"name": name, **row} for name, row in sorted(rows.items())]
+        out = [{"name": name, **row} for name, row in sorted(rows.items())]
+        # Spools the daemon could not attach (backing off / gave up) are part
+        # of the fleet's honest state — a permanently-garbage path must be
+        # visible here, not silently absent.
+        for row in status.get("attach_failures") or []:
+            out.append(
+                {
+                    "name": source_name_for(row["path"]),
+                    "path": row["path"],
+                    "attach_failed": True,
+                    "gave_up": bool(row.get("gave_up")),
+                    "attempts": row.get("attempts", 0),
+                    "retry_in_s": row.get("retry_in_s"),
+                    "error": row.get("error", ""),
+                }
+            )
+        return out
 
     def device_tree(self, target: Optional[str] = None) -> Optional[CallTree]:
         # One device artifact per fleet: every co-located target runs the
@@ -741,6 +758,12 @@ def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
                 f"{row.get('dropped_batches', 0):>5} {row.get('backlog_bytes', 0):>8} "
                 f"{row.get('restarts', 0):>8}  {row.get('pid', '?')}"
             )
+    for row in status.get("attach_failures") or []:
+        if row.get("gave_up"):
+            state = f"GAVE UP after {row.get('attempts', '?')} attempts"
+        else:
+            state = f"attach retry in {row.get('retry_in_s', '?')}s (attempt {row.get('attempts', '?')})"
+        lines.append(f"  !! {row.get('path', '?')}: {state} — {row.get('error', '')}")
     lines += ["", f"{'SHARE':>8}  HOTTEST PATHS"]
     for hp in status.get("hot_paths", [])[:k]:
         lines.append(f"{hp['share']:8.2%}  {'/'.join(hp['path'])}")

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import fnmatch
 import os
+import random
 import time
 from collections import deque
 from typing import Callable, Optional, Sequence
@@ -42,6 +43,7 @@ from .spool import SpoolError, SpoolReader
 from .wire import Bye, Decoder, Hello, RawSample, Rusage
 
 STALLED = "TARGET_STALLED"
+RESUMED = "TARGET_RESUMED"
 
 
 def _pid_alive(pid: int) -> bool:
@@ -109,6 +111,7 @@ class SpoolSource:
         self.n_ticks_reported = 0
         self.bye_seen = False
         self.stalled = False
+        self.resumed_pending = False  # stalled->live edge awaiting an event
         self.restarts = 0
         self.drained_bytes = 0
         self.backlog_bytes = 0
@@ -151,6 +154,8 @@ class SpoolSource:
             self.n_stacks += 1
             self.samples_since_publish += 1
             self._last_sample_wall = time.monotonic()
+            if self.stalled:
+                self.resumed_pending = True  # recovery is an event, not silence
             self.stalled = False
         elif isinstance(ev, Hello):
             self.target_pid = ev.pid
@@ -234,6 +239,7 @@ class SpoolSource:
             self.stalled = True
             return {
                 "kind": STALLED,
+                "detector": "stall",
                 "target": self.name,
                 "path": [],
                 "share": 1.0,
@@ -323,6 +329,9 @@ class SpoolSet:
         watch_dir: Optional[str] = None,
         watch_glob: str = "*.spool",
         make_source: Callable[[str, str], Optional[SpoolSource]],
+        attach_retry_base_s: float = 0.5,
+        attach_retry_cap_s: float = 30.0,
+        attach_max_attempts: int = 8,
     ):
         self.sources: dict[str, SpoolSource] = {}  # insertion order = rotation
         self.watch_dir = watch_dir
@@ -330,6 +339,70 @@ class SpoolSet:
         self._make = make_source
         self._pending: dict[str, None] = dict.fromkeys(paths)
         self._attached_paths: set[str] = set()
+        # Attach failures back off exponentially (with jitter, so a fleet of
+        # daemons never stampedes a shared filesystem in lockstep) instead of
+        # retrying every drain pass; after the budget the path is parked as
+        # given-up — visible, terminal, and only revived if the file changes.
+        self.attach_retry_base_s = attach_retry_base_s
+        self.attach_retry_cap_s = attach_retry_cap_s
+        self.attach_max_attempts = attach_max_attempts
+        # path -> {"attempts": int, "next_t": monotonic, "fingerprint": (sz, mtime_ns)}
+        self._backoff: dict[str, dict] = {}
+        self._given_up: dict[str, dict] = {}
+        self.gave_up_now: list[str] = []  # drained by the daemon per pass
+
+    @staticmethod
+    def _fingerprint(path: str) -> Optional[tuple[int, int]]:
+        try:
+            st = os.stat(path)
+        except OSError:
+            return None
+        return (st.st_size, st.st_mtime_ns)
+
+    def _note_attach_failure(self, path: str) -> None:
+        state = self._backoff.setdefault(
+            path, {"attempts": 0, "next_t": 0.0, "fingerprint": None}
+        )
+        state["attempts"] += 1
+        state["fingerprint"] = self._fingerprint(path)
+        if state["attempts"] >= self.attach_max_attempts:
+            self._given_up[path] = self._backoff.pop(path)
+            self.gave_up_now.append(path)
+            return
+        delay = min(
+            self.attach_retry_cap_s,
+            self.attach_retry_base_s * (2.0 ** (state["attempts"] - 1)),
+        )
+        state["next_t"] = time.monotonic() + delay * random.uniform(0.8, 1.2)
+
+    def _attach_allowed(self, path: str) -> bool:
+        gave = self._given_up.get(path)
+        if gave is not None:
+            # A rewritten file is a new incarnation: one fresh budget.
+            if self._fingerprint(path) != gave["fingerprint"]:
+                del self._given_up[path]
+                self._backoff.pop(path, None)
+                return True
+            return False
+        state = self._backoff.get(path)
+        return state is None or time.monotonic() >= state["next_t"]
+
+    def attach_failure_rows(self) -> list[dict]:
+        """Backoff/give-up state for status(), ``/targets`` and ``top``."""
+        now = time.monotonic()
+        rows = []
+        for path, state in self._backoff.items():
+            rows.append(
+                {
+                    "path": path,
+                    "attempts": state["attempts"],
+                    "gave_up": False,
+                    "retry_in_s": round(max(0.0, state["next_t"] - now), 3),
+                }
+            )
+        for path, state in self._given_up.items():
+            rows.append({"path": path, "attempts": state["attempts"], "gave_up": True})
+        return rows
 
     def name_for(self, path: str) -> str:
         name = source_name_for(path)
@@ -378,9 +451,14 @@ class SpoolSet:
         for p in candidates:
             if p in self._attached_paths or not os.path.exists(p):
                 continue
+            if not self._attach_allowed(p):
+                continue  # backing off, or given up on this incarnation
             src = self._make(self.name_for(p), p)
             if src is None:
-                continue  # transient (half-created / unreadable); retry later
+                self._note_attach_failure(p)
+                continue  # half-created / unreadable; retried with backoff
+            self._backoff.pop(p, None)
+            self._given_up.pop(p, None)
             fresh.append(self.adopt(src))
         return fresh
 

@@ -1,0 +1,586 @@
+"""Fault corpus + scored detector harness tests.
+
+Three layers:
+
+* scoreboard unit tests — classification, window scoring, floors, bench
+  diffs (pure functions, no processes);
+* daemon plumbing — fault-marker ingestion, attach backoff/give-up,
+  poisoned verdict callbacks, detector recovery transitions, straggler and
+  phase-segmentation edge cases;
+* one end-to-end smoke (marked slow) — the injected_spin scenario through
+  real child + agent + daemon processes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import pytest
+
+from repro.core.calltree import CallTree
+from repro.core.detector import (
+    LIVELOCK,
+    LIVELOCK_CLEARED,
+    DominanceDetector,
+    Rule,
+    StragglerDetector,
+    TrendDetector,
+    TrendRule,
+    WatchdogLoop,
+    segment_phases,
+)
+from repro.faults.scoreboard import (
+    DETECTOR_COLUMNS,
+    build_bench,
+    detector_of,
+    diff_bench,
+    floor_report,
+    score_runs,
+)
+from repro.profilerd.daemon import FAULT_MARKERS_FILENAME, DaemonConfig, ProfilerDaemon
+from repro.profilerd.daemon import rule_from_spec, rule_to_spec
+from repro.profilerd.spool import SpoolWriter
+from repro.profilerd.wire import Encoder, RawFrame, RawSample
+
+
+def wait_until(pred, timeout_s=10.0, interval_s=0.01, desc="condition"):
+    deadline = time.monotonic() + timeout_s
+    while True:
+        value = pred()
+        if value:
+            return value
+        if time.monotonic() >= deadline:
+            raise AssertionError(f"timed out after {timeout_s:g}s waiting for {desc}")
+        time.sleep(interval_s)
+
+
+class FakeTarget:
+    """Deterministic spool publisher (same shape as test_profilerd's)."""
+
+    def __init__(self, path, leaf: str = "leaf_fn", pid: int = 0):
+        self.path = str(path)
+        self.leaf = leaf
+        self.writer = SpoolWriter(self.path, capacity=1 << 20)
+        self.enc = Encoder()
+        self.n = 0
+        self.writer.write(self.enc.encode_hello(pid or os.getpid(), 0.01))
+
+    def emit(self, k: int = 1, leaf=None):
+        frames = [
+            RawFrame("/fake/app.py", "main", 1),
+            RawFrame("/fake/app.py", leaf or self.leaf, 2),
+        ]
+        for _ in range(k):
+            payload, fresh = self.enc.encode_tick(
+                [RawSample(self.n * 0.01, 1, "w", frames)]
+            )
+            if self.writer.write(payload):
+                self.n += 1
+            else:
+                self.enc.rollback(fresh)
+        return self
+
+    def bye(self):
+        self.writer.write_bye(self.enc.encode_bye(self.n))
+        self.writer.close()
+
+
+# ---------------------------------------------------------------------------
+# scoreboard
+
+
+def _ev(kind, detector=None, wall=100.0, **extra):
+    ev = {"kind": kind, "wall_time": wall}
+    if detector is not None:
+        ev["detector"] = detector
+    ev.update(extra)
+    return ev
+
+
+class TestDetectorClassification:
+    def test_scored_columns(self):
+        assert detector_of(_ev("LIVELOCK_SUSPECT", "dominance")) == "dominance"
+        assert detector_of(_ev("LIVELOCK", "trend")) == "trend_livelock"
+        assert detector_of(_ev("SHARE_DRIFT", "trend")) == "trend_drift"
+        assert detector_of(_ev("TARGET_STALLED", "stall")) == "stall"
+        assert detector_of(_ev("STRAGGLER", "straggler")) == "straggler"
+
+    def test_informational_and_lifecycle_unscored(self):
+        assert detector_of(_ev("DOMINANT", "trend")) is None  # hot != anomalous
+        for kind in ("TARGET_ATTACHED", "FAULT_INJECT", "FAULT_CLEAR",
+                     "CALLBACK_FAILED", "SOURCE_GAVE_UP", "FAULT_MARKER_INVALID"):
+            assert detector_of(_ev(kind)) is None
+
+    def test_recovery_kinds_unscored(self):
+        assert detector_of(_ev("LIVELOCK_CLEARED", "trend")) is None
+        assert detector_of(_ev("TARGET_RESUMED", "stall")) is None
+
+
+class TestScoreRuns:
+    T_INJECT, T_CLEAR, EPOCH = 100.0, 104.0, 0.5
+
+    def _score(self, fault_events, control_events=()):
+        return score_runs(
+            list(fault_events),
+            list(control_events),
+            t_inject=self.T_INJECT,
+            t_clear=self.T_CLEAR,
+            epoch_s=self.EPOCH,
+            grace_epochs=2,
+        )
+
+    def test_in_window_verdict_is_detection_with_ttd(self):
+        cells = self._score([_ev("LIVELOCK_SUSPECT", "dominance", wall=101.0)])
+        dom = cells["dominance"]
+        assert dom.detected and dom.true_positives == 1
+        assert dom.ttd_s == pytest.approx(1.0)
+        assert dom.ttd_epochs == pytest.approx(2.0)  # 1.0s / 0.5s epochs
+
+    def test_pre_inject_verdict_is_fault_run_fp(self):
+        cells = self._score([_ev("LIVELOCK_SUSPECT", "dominance", wall=99.0)])
+        dom = cells["dominance"]
+        assert not dom.detected and dom.fault_run_fps == 1
+
+    def test_grace_window_bounds(self):
+        inside = _ev("SHARE_DRIFT", "trend", wall=self.T_CLEAR + 0.9)  # within 2*0.5
+        outside = _ev("SHARE_DRIFT", "trend", wall=self.T_CLEAR + 1.1)
+        cells = self._score([inside, outside])
+        drift = cells["trend_drift"]
+        assert drift.detected and drift.true_positives == 1 and drift.fault_run_fps == 1
+
+    def test_control_events_are_fps(self):
+        cells = self._score([], [_ev("STRAGGLER", "straggler", wall=50.0)])
+        assert cells["straggler"].control_fps == 1
+        assert not cells["straggler"].detected
+
+    def test_recovery_observed(self):
+        cells = self._score([
+            _ev("LIVELOCK", "trend", wall=101.0),
+            _ev("LIVELOCK_CLEARED", "trend", wall=104.5),
+            _ev("TARGET_RESUMED", "stall", wall=104.5),
+        ])
+        assert cells["trend_livelock"].detected
+        assert cells["trend_livelock"].recovery_observed
+        assert cells["stall"].recovery_observed
+
+    def test_all_columns_present(self):
+        assert set(self._score([])) == set(DETECTOR_COLUMNS)
+
+
+class TestFloorsAndDiff:
+    def _cells(self, detected=True, ttd=1.5, control_fps=0):
+        cells = score_runs([], [], t_inject=0.0, t_clear=1.0, epoch_s=0.5)
+        cell = cells["dominance"]
+        cell.detected = detected
+        cell.ttd_epochs = ttd if detected else None
+        cell.control_fps = control_fps
+        return cells
+
+    def test_floor_passes_when_detected_fast_and_clean(self):
+        rep = floor_report({"spin": self._cells()})
+        assert rep["pass"] and rep["problems"] == []
+        assert rep["per_scenario"]["spin"]["best_ttd_epochs"] == 1.5
+
+    def test_floor_fails_on_missed_scenario(self):
+        rep = floor_report({"spin": self._cells(detected=False)})
+        assert not rep["pass"] and "no detector fired" in rep["problems"][0]
+
+    def test_floor_fails_on_slow_detection(self):
+        rep = floor_report({"spin": self._cells(ttd=11.0)}, ttd_floor_epochs=10.0)
+        assert not rep["pass"] and "time-to-detect" in rep["problems"][0]
+
+    def test_floor_fails_on_control_fp(self):
+        rep = floor_report({"spin": self._cells(control_fps=2)})
+        assert not rep["pass"] and "false positive" in rep["problems"][-1]
+
+    def _bench(self, cells):
+        return build_bench({"spin": cells}, config={})
+
+    def test_diff_flags_detected_to_missed(self):
+        problems = diff_bench(self._bench(self._cells()), self._bench(self._cells(detected=False)))
+        assert any("detected -> missed" in p for p in problems)
+
+    def test_diff_flags_new_control_fp(self):
+        problems = diff_bench(self._bench(self._cells()), self._bench(self._cells(control_fps=1)))
+        assert any("false positive" in p for p in problems)
+
+    def test_diff_tolerates_skipped_scenario(self):
+        base = self._bench(self._cells())
+        new = build_bench({}, config={}, skipped={"spin": "missing dependency: jax"})
+        assert diff_bench(base, new) == []
+
+    def test_diff_flags_vanished_scenario(self):
+        base = self._bench(self._cells())
+        new = build_bench({}, config={})
+        assert any("missing from new run" in p for p in diff_bench(base, new))
+
+    def test_diff_ignores_latency_changes(self):
+        problems = diff_bench(self._bench(self._cells(ttd=1.0)), self._bench(self._cells(ttd=9.0)))
+        assert problems == []
+
+
+# ---------------------------------------------------------------------------
+# trend recovery + phase/straggler edges (satellite: only onset was covered)
+
+
+def _window(leaf: str, n: int = 50) -> CallTree:
+    t = CallTree()
+    for _ in range(n):
+        t.add_stack(["main", "loop", leaf])
+    return t
+
+
+def _diverse_window(n: int = 50) -> CallTree:
+    t = CallTree()
+    for i in range(n):
+        t.add_stack(["main", "loop", f"op{i % 5}"])
+    return t
+
+
+class TestTrendRecovery:
+    def test_livelock_clears_when_dominance_breaks(self):
+        det = TrendDetector(TrendRule(epochs=2, min_baseline_epochs=99))
+        det.observe_epoch(_diverse_window(), progress=10)
+        for _ in range(3):  # dominance + stalled progress -> LIVELOCK
+            det.observe_epoch(_window("spin"), progress=10)
+        assert det.livelock_active
+        assert det.detection_latency(LIVELOCK) == 1  # began epoch 1, fired epoch 2
+        out = det.observe_epoch(_diverse_window(), progress=11)
+        cleared = [v for v in out if v.kind == LIVELOCK_CLEARED]
+        assert len(cleared) == 1
+        assert not det.livelock_active
+        # stamped with the onset epoch, so wedged-time is reconstructable
+        assert cleared[0].began_epoch == det.first_detection(LIVELOCK).began_epoch
+        assert cleared[0].epoch > cleared[0].began_epoch
+
+    def test_livelock_clears_when_progress_resumes(self):
+        det = TrendDetector(TrendRule(epochs=2, min_baseline_epochs=99))
+        for _ in range(3):
+            det.observe_epoch(_window("spin"), progress=5)
+        assert det.livelock_active
+        # same dominant frame, but the target is minting new stacks again
+        out = det.observe_epoch(_window("spin"), progress=6)
+        assert [v.kind for v in out] == [LIVELOCK_CLEARED]
+        assert not det.livelock_active
+
+    def test_cleared_emitted_once_per_onset(self):
+        det = TrendDetector(TrendRule(epochs=2, min_baseline_epochs=99))
+        for _ in range(3):
+            det.observe_epoch(_window("spin"), progress=5)
+        det.observe_epoch(_diverse_window(), progress=6)
+        out = det.observe_epoch(_diverse_window(), progress=7)
+        assert [v.kind for v in out] == []
+
+
+class TestSegmentPhasesEdges:
+    def test_empty_sequence(self):
+        assert segment_phases([]) == []
+
+    def test_single_epoch_is_one_phase(self):
+        assert segment_phases([{"a": 1.0}]) == [(0, 0)]
+
+    def test_identical_vectors_are_one_phase(self):
+        vecs = [{"a": 0.5, "b": 0.5}] * 6
+        assert segment_phases(vecs) == [(0, 5)]
+
+    def test_empty_share_vectors(self):
+        # all-empty vectors have zero TV distance: one phase, no crash
+        assert segment_phases([{}, {}, {}]) == [(0, 2)]
+
+    def test_jump_splits_phases(self):
+        vecs = [{"a": 1.0}] * 3 + [{"b": 1.0}] * 2
+        assert segment_phases(vecs) == [(0, 2), (3, 4)]
+
+
+class TestStragglerEdges:
+    def test_empty_and_single_host(self):
+        det = StragglerDetector()
+        assert det.observe({}) == []
+        assert det.observe({"h0": _window("x")}) == []
+
+    def test_identical_hosts_silent(self):
+        det = StragglerDetector(threshold=0.2)
+        hosts = {f"h{i}": _diverse_window() for i in range(4)}
+        assert det.observe(hosts) == []
+
+    def test_empty_tree_host(self):
+        # a host with no samples at all must not crash the fleet comparison
+        det = StragglerDetector(threshold=0.4)
+        hosts = {"h0": CallTree(), "h1": _diverse_window(), "h2": _diverse_window()}
+        flagged = det.observe(hosts)
+        assert all(h != "h1" and h != "h2" for h, _ in flagged)
+
+    def test_divergent_host_flagged_despite_deep_shared_prefix(self):
+        # self-share comparison: a deep common prefix must not dilute the
+        # divergence (inclusive shares would)
+        deep = ["bootstrap", "runtime", "main", "train", "step"]
+        healthy = CallTree()
+        for i in range(100):
+            healthy.add_stack(deep + [f"op{i % 5}"])
+        parked = CallTree()
+        for _ in range(100):
+            parked.add_stack(deep + ["collective_wait"])
+        hosts = {"h0": healthy.copy(), "h1": healthy.copy(), "h2": parked}
+        flagged = StragglerDetector(threshold=0.5).observe(hosts)
+        assert [h for h, _ in flagged] == ["h2"]
+
+
+# ---------------------------------------------------------------------------
+# callback hardening (satellite: a poison callback must not kill sampling)
+
+
+class TestCallbackHardening:
+    def _firing_detector(self, *callbacks):
+        det = DominanceDetector([Rule(threshold=0.5, consecutive=1, min_window_total=1)])
+        for cb in callbacks:
+            det.add_callback(cb)
+        return det
+
+    def test_poison_callback_does_not_break_later_callbacks(self):
+        seen = []
+        det = self._firing_detector(
+            lambda ev: (_ for _ in ()).throw(RuntimeError("poison")),
+            seen.append,
+        )
+        fired = det.observe(_window("hot"))
+        assert fired and seen == fired
+        assert len(det.callback_failures) == 1
+        ev, tb = det.callback_failures[0]
+        assert ev is fired[0] and "poison" in tb
+
+    def test_on_callback_error_hook_receives_traceback(self):
+        hook_calls = []
+        det = self._firing_detector(lambda ev: 1 / 0)
+        det.on_callback_error = lambda ev, tb: hook_calls.append((ev, tb))
+        det.observe(_window("hot"))
+        assert len(hook_calls) == 1 and "ZeroDivisionError" in hook_calls[0][1]
+
+    def test_failing_error_hook_is_swallowed(self):
+        det = self._firing_detector(lambda ev: 1 / 0)
+        det.on_callback_error = lambda ev, tb: (_ for _ in ()).throw(ValueError("sink"))
+        assert det.observe(_window("hot"))  # must not raise
+
+    def test_detector_keeps_firing_after_poison(self):
+        det = self._firing_detector(lambda ev: 1 / 0)
+        cum = _window("hot")
+        det.observe(cum.copy())
+        for _ in range(50):  # snapshots are cumulative; grow the window
+            cum.add_stack(["main", "loop", "hot"])
+        fired = det.observe(cum.copy())
+        assert fired and len(det.callback_failures) == 2
+
+    def test_watchdog_records_observe_errors_and_keeps_running(self):
+        class BrokenSampler:
+            calls = 0
+
+            def snapshot(self):
+                BrokenSampler.calls += 1
+                raise RuntimeError("sampler exploded")
+
+        det = DominanceDetector([Rule()])
+        wd = WatchdogLoop(BrokenSampler(), det, interval_s=0.01)
+        wd.start()
+        try:
+            wait_until(lambda: len(wd.errors) >= 2, desc="watchdog surviving errors")
+            assert wd._thread.name == "repro-prof-watchdog"
+        finally:
+            wd.stop()
+        assert any("sampler exploded" in tb for tb in wd.errors)
+
+
+# ---------------------------------------------------------------------------
+# daemon plumbing: markers, backoff, give-up
+
+
+class TestFaultMarkerIngestion:
+    def _daemon(self, tmp_path, **cfg_kw):
+        spool = str(tmp_path / "t.spool")
+        target = FakeTarget(spool, leaf="work_fn")
+        target.emit(5)
+        cfg = DaemonConfig(
+            spool_paths=(spool,),
+            out_dir=str(tmp_path / "out"),
+            epoch_s=0.05,
+            **cfg_kw,
+        )
+        daemon = ProfilerDaemon(cfg)
+        daemon.attach()
+        daemon.drain()
+        return daemon, target
+
+    def _write_marker(self, daemon, line: str):
+        path = os.path.join(daemon.out_dir, FAULT_MARKERS_FILENAME)
+        with open(path, "a") as f:
+            f.write(line)
+
+    def test_markers_become_events_with_epoch_stamp(self, tmp_path):
+        daemon, target = self._daemon(tmp_path)
+        self._write_marker(
+            daemon,
+            json.dumps({"op": "inject", "scenario": "spin", "wall_time": 123.0}) + "\n",
+        )
+        daemon.drain()
+        self._write_marker(
+            daemon,
+            json.dumps({"op": "clear", "scenario": "spin", "wall_time": 125.0}) + "\n",
+        )
+        daemon.drain()
+        kinds = [e["kind"] for e in daemon.events]
+        assert "FAULT_INJECT" in kinds and "FAULT_CLEAR" in kinds
+        inject = next(e for e in daemon.events if e["kind"] == "FAULT_INJECT")
+        assert inject["scenario"] == "spin"
+        assert inject["detector"] == "harness"
+        assert inject["marker_wall_time"] == 123.0
+        assert "epoch" in inject and "target_epochs" in inject
+        target.bye()
+
+    def test_partial_marker_line_buffers_until_complete(self, tmp_path):
+        daemon, target = self._daemon(tmp_path)
+        full = json.dumps({"op": "inject", "scenario": "spin", "wall_time": 1.0}) + "\n"
+        self._write_marker(daemon, full[:10])
+        daemon.drain()
+        assert not [e for e in daemon.events if e["kind"].startswith("FAULT_")]
+        self._write_marker(daemon, full[10:])
+        daemon.drain()
+        assert [e for e in daemon.events if e["kind"] == "FAULT_INJECT"]
+        target.bye()
+
+    def test_invalid_marker_line_is_loud_not_fatal(self, tmp_path):
+        daemon, target = self._daemon(tmp_path)
+        self._write_marker(daemon, "not json at all\n")
+        daemon.drain()
+        assert [e for e in daemon.events if e["kind"] == "FAULT_MARKER_INVALID"]
+        # subsequent valid markers still ingest
+        self._write_marker(
+            daemon, json.dumps({"op": "inject", "scenario": "s", "wall_time": 1.0}) + "\n"
+        )
+        daemon.drain()
+        assert [e for e in daemon.events if e["kind"] == "FAULT_INJECT"]
+        target.bye()
+
+
+class TestAttachBackoff:
+    def test_garbage_target_gives_up_after_budget(self, tmp_path):
+        good = str(tmp_path / "good.spool")
+        bad = str(tmp_path / "bad.spool")
+        target = FakeTarget(good, leaf="work_fn")
+        target.emit(3)
+        with open(bad, "wb") as f:
+            f.write(b"this is not a spool file at all, padded " * 4)
+        cfg = DaemonConfig(
+            spool_paths=(good, bad),
+            out_dir=str(tmp_path / "out"),
+            attach_retry_base_s=0.01,
+            attach_retry_cap_s=0.02,
+            attach_max_attempts=3,
+        )
+        daemon = ProfilerDaemon(cfg)
+        daemon.attach()
+
+        def gave_up():
+            daemon.drain()
+            return [e for e in daemon.events if e["kind"] == "SOURCE_GAVE_UP"]
+
+        events = wait_until(gave_up, desc="SOURCE_GAVE_UP after retry budget")
+        assert events[0]["path"] == bad
+        assert events[0]["attempts"] == 3
+        assert events[0]["error"]
+        # terminal state is visible in status() for /targets + top
+        rows = daemon.status()["attach_failures"]
+        assert [r for r in rows if r["path"] == bad and r["gave_up"]]
+        # and SOURCE_ATTACH_FAILED was logged when the failure first appeared
+        assert [e for e in daemon.events if e["kind"] == "SOURCE_ATTACH_FAILED"]
+        target.bye()
+
+    def test_rewritten_file_gets_fresh_budget(self, tmp_path):
+        calls = []
+
+        def make_source(name, path):
+            calls.append(path)
+            return None
+
+        from repro.profilerd.sources import SpoolSet
+
+        bad = str(tmp_path / "bad.spool")
+        with open(bad, "wb") as f:
+            f.write(b"garbage-v1")
+        ss = SpoolSet(
+            paths=(bad,),
+            make_source=make_source,
+            attach_retry_base_s=0.001,
+            attach_retry_cap_s=0.002,
+            attach_max_attempts=2,
+        )
+        wait_until(
+            lambda: (ss.discover(), bad in ss._given_up)[1],
+            desc="give-up on garbage path",
+        )
+        n_before = len(calls)
+        ss.discover()
+        assert len(calls) == n_before  # parked: no further attach attempts
+        time.sleep(0.005)
+        with open(bad, "wb") as f:
+            f.write(b"garbage-v2-different-length")
+        wait_until(
+            lambda: (ss.discover(), len(calls) > n_before)[1],
+            desc="revival after rewrite",
+        )
+
+    def test_backoff_rows_expose_retry_countdown(self, tmp_path):
+        from repro.profilerd.sources import SpoolSet
+
+        bad = str(tmp_path / "bad.spool")
+        with open(bad, "wb") as f:
+            f.write(b"junk")
+        ss = SpoolSet(
+            paths=(bad,),
+            make_source=lambda name, path: None,
+            attach_retry_base_s=5.0,
+            attach_max_attempts=4,
+        )
+        ss.discover()
+        rows = ss.attach_failure_rows()
+        assert rows[0]["attempts"] == 1 and not rows[0]["gave_up"]
+        assert rows[0]["retry_in_s"] > 0
+
+
+class TestRuleSpecRoundtrip:
+    def test_roundtrip(self):
+        rule = Rule(pattern="allreduce", threshold=0.6, consecutive=3,
+                    kind="COLLECTIVE_STALL", self_only=False, min_window_total=8.0)
+        spec = rule_to_spec(rule)
+        back = rule_from_spec(spec)
+        assert (back.pattern, back.threshold, back.consecutive, back.kind,
+                back.self_only, back.min_window_total) == (
+            rule.pattern, rule.threshold, rule.consecutive, rule.kind,
+            rule.self_only, rule.min_window_total)
+
+    def test_unknown_key_rejected(self):
+        with pytest.raises(ValueError):
+            rule_from_spec("pattern=x,bogus=1")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end smoke: one real scenario through child + agent + daemon
+
+
+@pytest.mark.slow
+class TestHarnessEndToEnd:
+    def test_injected_spin_detected_with_ground_truth(self):
+        from repro.faults import HarnessConfig, SCENARIOS, run_scenario, score_runs
+
+        cfg = HarnessConfig(clean_s=1.6, fault_s=2.4, recovery_s=1.2)
+        res = run_scenario(SCENARIOS["injected_spin"], cfg, control=False)
+        kinds = {e["kind"] for e in res.events}
+        assert "FAULT_INJECT" in kinds and "FAULT_CLEAR" in kinds
+        cells = score_runs(
+            res.events, [],
+            t_inject=res.t_inject, t_clear=res.t_clear,
+            epoch_s=cfg.epoch_s, grace_epochs=cfg.grace_epochs,
+        )
+        dom = cells["dominance"]
+        assert dom.detected, f"no dominance verdict; kinds={sorted(kinds)}"
+        assert dom.ttd_epochs is not None and dom.ttd_epochs <= 10
+        assert dom.fault_run_fps == 0
