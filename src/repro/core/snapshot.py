@@ -750,8 +750,13 @@ class CountSealer:
     magnitude over the <5 % ingest-overhead budget.  The daemon's host plane
     only ever bumps whole-sample counts along cached chains, so its epoch
     delta is fully described by ``(chain, hit count)`` pairs, which the
-    ingestor already maintains (one integer add per sample).  Sealing then
-    writes a :data:`K_COUNTS` record: two varints per touched chain.
+    ingestor already maintains — one integer add per sample on the scalar
+    path, one *aggregated* add per ``(thread, stack)`` group on the
+    vectorized batch path (``TreeIngestor.ingest_batch``): either way the
+    entries arrive here pre-summed, there is no per-hit work at seal time.
+    Sealing then writes a :data:`K_COUNTS` record: two varints per touched
+    chain, with counts coerced through ``int()`` so numpy integers from the
+    batch lane encode identically to Python ints.
 
     Keyframes (segment rotation) still write a full snapshot; mutations that
     bypass the chain cache (legacy v1 samples, cache overflow) force an early

@@ -19,7 +19,12 @@ never instrumented.  This package is that plane for JAX jobs:
   plus a per-``stack_id`` whole-stack memo for wire v2;
 * :mod:`repro.profilerd.ingest`   — cached-path call-tree ingestion: each
   ``(thread, stack_id)`` resolves once, repeats are an O(depth) float-add
-  loop over the cached :class:`~repro.core.calltree.CallNode` chain;
+  loop over the cached :class:`~repro.core.calltree.CallNode` chain, and
+  whole ``SampleBatch`` columns collapse to one add per group;
+* :mod:`repro.profilerd.pipeline` — :class:`IngestPipeline`, the one object
+  composing reader + decoder + ingestor + sealer + stats (vectorized via
+  numpy when available, per-sample otherwise) shared by the daemon,
+  benchmarks and tests;
 * :mod:`repro.profilerd.daemon`   — drains the spool, merges into a
   :class:`~repro.core.calltree.CallTree`, runs dominance/stall detection
   out-of-process, publishes live status and HTML/JSON reports;
@@ -46,6 +51,7 @@ _EXPORTS = {
     "DaemonConfig": ".daemon",
     "ProfilerDaemon": ".daemon",
     "TreeIngestor": ".ingest",
+    "IngestPipeline": ".pipeline",
     "ProfileLoadError": ".profiles",
     "load_profile": ".profiles",
     "SymbolResolver": ".resolver",

@@ -40,6 +40,7 @@ from repro.core.calltree import CallTree
 from repro.core.detector import Rule, TrendRule
 from repro.core.snapshot import EpochMeta, TimelineWriter
 
+from .pipeline import merge_ingest_stats
 from .profiles import DEVICE_TREE_FILENAME, TARGETS_DIRNAME, TIMELINE_DIRNAME
 from .sources import RESUMED, STALLED, SpoolSet, SpoolSource, _pid_alive, source_name_for
 from .spool import SpoolError, SpoolReader, _ShortHeader
@@ -304,6 +305,9 @@ class ProfilerDaemon:
         self._fleet_n = 0  # source count at the last fleet merge
         self._target_rows: dict[str, str] = {}  # last written status row per target
         self.events: list[dict] = []
+        # Logged once per daemon: the vectorized ingest lane being absent
+        # (no numpy) is an environment property, not a per-target one.
+        self._scalar_fallback_logged = False
         # Ring of windowed fleet snapshots: (wall_time, cumulative-tree copy)
         # serving retrospective "what changed in the last N windows" queries.
         self.windows: deque = deque(maxlen=cfg.window_ring)
@@ -458,6 +462,16 @@ class ProfilerDaemon:
             return None
         self._attach_errors.pop(path, None)
         self._last_attach_error = None
+        if not src.pipeline.vectorized and not self._scalar_fallback_logged:
+            # Per-sample decode still works — this only flags the missing
+            # throughput headroom (numpy absent), visibly but exactly once.
+            self._scalar_fallback_logged = True
+            self._record_event(
+                {"kind": "INGEST_SCALAR_FALLBACK", "detector": "ingest", "target": name,
+                 "path": [], "share": 0.0,
+                 "reason": "numpy unavailable: vectorized batch ingest disabled",
+                 "wall_time": time.time()}
+            )
         src.detector.add_callback(lambda ev, _n=name: self._on_anomaly(ev, _n))
         src.detector.on_callback_error = (
             lambda ev, tb, _n=name: self._on_callback_failed(ev, tb, _n)
@@ -918,11 +932,9 @@ class ProfilerDaemon:
                 "hits": sum(s.resolver.hits for s in srcs),
                 "misses": sum(s.resolver.misses for s in srcs),
             },
-            "ingest": {
-                "fast_hits": sum(s.ingestor.fast_hits for s in srcs),
-                "slow_ingests": sum(s.ingestor.slow_ingests for s in srcs),
-                "cached_paths": sum(s.ingestor.stats()["cached_paths"] for s in srcs),
-            },
+            # The unified ingest_stats schema (repro.profilerd.pipeline),
+            # summed across sources; per-target rows carry the same dict.
+            "ingest": merge_ingest_stats([s.ingest_stats() for s in srcs]),
             # Degraded-mode accounting for re-attaching mid-stream (a
             # previous reader consumed the STRDEF/STACKDEF definitions):
             # such samples ingest as "?" placeholder stacks, never silently.

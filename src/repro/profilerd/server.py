@@ -741,6 +741,10 @@ def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
             f"epochs={tl.get('epochs', 0)} call_sites={tl.get('call_sites', 0)} "
             f"windows={status.get('windows', 0)}"
         )
+        if status.get("ingest"):
+            from .pipeline import format_ingest_stats
+
+            head += "\n" + format_ingest_stats(status["ingest"])
     lines = [head]
     targets = status.get("targets") or {}
     if len(targets) > 1 or status.get("watch"):

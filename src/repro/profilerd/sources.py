@@ -4,14 +4,14 @@ The paper's design point is a *single* external profiler observing the whole
 simulated system; this module is the fan-in that makes one daemon process
 scale to N targets.  Two pieces:
 
-* :class:`SpoolSource` — everything one attached target owns: spool reader,
-  streaming decoder, symbol resolver, :class:`~repro.profilerd.ingest.TreeIngestor`
-  (so the O(depth) single-target fast path is untouched — dispatch between
-  sources happens per *chunk*, never per sample), per-target dominance/trend
-  detectors, an optional per-target timeline ring, stall bookkeeping, and
-  crash-and-restart re-attach (a restarted writer recreates the spool file;
-  the old mmap is drained dry, then the reader/decoder and every
-  ``stack_id``-keyed cache are rebuilt against the new incarnation).
+* :class:`SpoolSource` — everything one attached target owns: an
+  :class:`~repro.profilerd.pipeline.IngestPipeline` (reader -> decoder ->
+  ingestor -> sealer, vectorized when numpy is available, so dispatch
+  between sources happens per *chunk*, never per sample), per-target
+  dominance/trend detectors, an optional per-target timeline ring, stall
+  bookkeeping, and crash-and-restart re-attach (a restarted writer recreates
+  the spool file; the old mmap is drained dry, then the reader/decoder and
+  every ``stack_id``-keyed cache are rebuilt against the new incarnation).
 * :class:`SpoolSet`  — attach/discovery plus fair draining: explicit paths
   attach as they appear, a ``--watch`` directory is rescanned every drain
   pass so spools created *after* the daemon started are picked up within one
@@ -35,12 +35,11 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.calltree import CallTree
 from repro.core.detector import DominanceDetector, Rule, TrendDetector, TrendRule
-from repro.core.snapshot import CountSealer, EpochMeta, TimelineWriter
+from repro.core.snapshot import EpochMeta, TimelineWriter
 
-from .ingest import TreeIngestor
-from .resolver import SymbolResolver
+from .pipeline import IngestPipeline
 from .spool import SpoolError, SpoolReader
-from .wire import Bye, Decoder, Hello, RawSample, Rusage
+from .wire import Bye, Hello, Rusage
 
 STALLED = "TARGET_STALLED"
 RESUMED = "TARGET_RESUMED"
@@ -85,14 +84,8 @@ class SpoolSource:
     ):
         self.name = name
         self.path = path
-        self.reader = reader if reader is not None else SpoolReader(path)
-        self.decoder = Decoder()
-        self.resolver = SymbolResolver(collapse_origins)
-        self.ingestor = TreeIngestor(resolver=self.resolver)
-        self.tree = self.ingestor.tree
         self.detector = DominanceDetector(list(rules) if rules else [Rule()])
         self.timeline_writer: Optional[TimelineWriter] = None
-        self.sealer: Optional[CountSealer] = None
         self.trend: Optional[TrendDetector] = None
         if timeline_dir is not None:
             self.timeline_writer = TimelineWriter(
@@ -100,9 +93,16 @@ class SpoolSource:
                 epochs_per_segment=epochs_per_segment,
                 max_segments=max_segments,
             )
-            self.sealer = CountSealer(self.tree, self.timeline_writer)
             self.trend = TrendDetector(trend_rule)
-        self.timeline: deque = deque(maxlen=timeline_cap)  # (t, depth)
+        # The whole decode -> accumulate -> seal path lives in the pipeline;
+        # the source owns target policy (stall/re-attach/detectors/status).
+        self.pipeline = IngestPipeline(
+            reader if reader is not None else SpoolReader(path),
+            collapse_origins=collapse_origins,
+            timeline_writer=self.timeline_writer,
+            depth_timeline=deque(maxlen=timeline_cap),  # (t, depth)
+        )
+        self.tree = self.pipeline.tree
         self.rusage: deque = deque(maxlen=timeline_cap)
         self.target_pid = self.reader.writer_pid
         self.period_s = 0.0
@@ -120,10 +120,39 @@ class SpoolSource:
         self.last_snapshot: Optional[CallTree] = None
         self.attached_wall = time.monotonic()
         self._last_sample_wall: Optional[float] = None
-        # Re-attach carries these across decoder/reader incarnations.
-        self._unknown_refs_base = 0
-        self._degraded_defs_base = 0
+        # Re-attach carries this across reader incarnations (decoder loss
+        # counters carry inside the pipeline).
         self._dropped_base = 0
+
+    # -- pipeline views ------------------------------------------------------
+
+    @property
+    def reader(self) -> Optional[SpoolReader]:
+        return self.pipeline.reader
+
+    @reader.setter
+    def reader(self, value: Optional[SpoolReader]) -> None:
+        self.pipeline.reader = value
+
+    @property
+    def decoder(self):
+        return self.pipeline.decoder
+
+    @property
+    def resolver(self):
+        return self.pipeline.resolver
+
+    @property
+    def ingestor(self):
+        return self.pipeline.ingestor
+
+    @property
+    def sealer(self):
+        return self.pipeline.sealer
+
+    @property
+    def timeline(self) -> deque:
+        return self.pipeline.depth_timeline
 
     # -- aggregate counters --------------------------------------------------
 
@@ -139,25 +168,17 @@ class SpoolSource:
 
     @property
     def unknown_stack_refs(self) -> int:
-        return self._unknown_refs_base + self.decoder.unknown_stack_refs
+        return self.pipeline.unknown_stack_refs
 
     @property
     def degraded_stackdefs(self) -> int:
-        return self._degraded_defs_base + self.decoder.degraded_stackdefs
+        return self.pipeline.degraded_stackdefs
 
     # -- ingest --------------------------------------------------------------
 
     def _apply(self, ev) -> None:
-        if isinstance(ev, RawSample):
-            depth = self.ingestor.ingest(ev)
-            self.timeline.append((ev.t, depth))
-            self.n_stacks += 1
-            self.samples_since_publish += 1
-            self._last_sample_wall = time.monotonic()
-            if self.stalled:
-                self.resumed_pending = True  # recovery is an event, not silence
-            self.stalled = False
-        elif isinstance(ev, Hello):
+        """Target policy for the pipeline's non-sample events."""
+        if isinstance(ev, Hello):
             self.target_pid = ev.pid
             self.period_s = ev.period_s
             self.wire_version = ev.version
@@ -174,18 +195,27 @@ class SpoolSource:
         chunks across sources, so a minutes-deep backlog on one target
         streams through without starving the rest.
         """
-        chunk = self.reader.read()
-        if chunk:
-            for ev in self.decoder.feed(chunk):
-                self._apply(ev)
-            self.drained_bytes += len(chunk)
+        before = self.pipeline.samples
+        nbytes, events = self.pipeline.drain_chunk()
+        fresh = self.pipeline.samples - before
+        if fresh:
+            self.n_stacks += fresh
+            self.samples_since_publish += fresh
+            self._last_sample_wall = time.monotonic()
+            if self.stalled:
+                self.resumed_pending = True  # recovery is an event, not silence
+            self.stalled = False
+        for ev in events:
+            self._apply(ev)
+        if nbytes:
+            self.drained_bytes += nbytes
         self.backlog_bytes = self.reader.backlog
         # The writer sets the header flag even when the BYE *record* was
         # dropped on a full spool; honor it so a cleanly stopped target is
         # never mistaken for a stalled one.
         if self.reader.bye_seen:
             self.bye_seen = True
-        return len(chunk)
+        return nbytes
 
     def maybe_reattach(self) -> bool:
         """Re-attach to a recreated spool (writer crash-and-restart).
@@ -205,14 +235,10 @@ class SpoolSource:
             return False
         while self.drain_chunk():
             pass
-        self._unknown_refs_base += self.decoder.unknown_stack_refs
-        self._degraded_defs_base += self.decoder.degraded_stackdefs
         self._dropped_base += self.reader.dropped
         self.reader.close()
         self.reader = fresh
-        self.decoder = Decoder()
-        self.resolver.reset_interned()
-        self.ingestor.reset_chain_cache()
+        self.pipeline.reset_stream()
         self.target_pid = fresh.writer_pid
         self.period_s = 0.0  # until the new HELLO arrives
         self.bye_seen = False  # a stale bye=1 belongs to the dead incarnation
@@ -262,10 +288,9 @@ class SpoolSource:
 
     def seal_epoch(self, wall_time: float) -> tuple[Optional[EpochMeta], list]:
         """Seal this target's epoch into its ring; returns (meta, verdicts)."""
-        if self.sealer is None:
+        meta, entries = self.pipeline.seal_epoch(wall_time)
+        if meta is None:
             return None, []
-        entries, untracked = self.ingestor.drain_epoch()
-        meta = self.sealer.seal(entries, wall_time=wall_time, untracked=untracked)
         verdicts: list = []
         if self.trend is not None:
             # The trend window: rebuilt from the epoch's (chain, count) pairs —
@@ -297,8 +322,13 @@ class SpoolSource:
             "restarts": self.restarts,
             "unknown_stack_refs": self.unknown_stack_refs,
             "degraded_stackdefs": self.degraded_stackdefs,
-            "ingest": self.ingestor.stats(),
+            "ingest": self.ingest_stats(),
         }
+
+    def ingest_stats(self) -> dict:
+        """The unified ``ingest_stats`` dict for this target (schema in
+        :mod:`repro.profilerd.pipeline`)."""
+        return self.pipeline.ingest_stats()
 
     def close(self) -> None:
         if self.timeline_writer is not None:

@@ -52,6 +52,20 @@ Version negotiation rides on ``HELLO``: a v2 agent announces ``version=2``
 and emits ``STACKDEF``/``SAMPLE2``; the decoder dispatches on record kind, so
 it decodes v1 and v2 streams (and old v1 spool files) with no mode switch.
 ``Encoder(version=1)`` keeps producing pure-v1 streams for old consumers.
+
+Batch decode (vectorized ingest)
+--------------------------------
+
+``SAMPLE2`` records are a fixed 29 bytes on the wire precisely so a run of
+them can be decoded as *one* ``np.frombuffer`` structured-dtype view instead
+of a per-record ``struct.unpack`` loop.  :meth:`Decoder.feed_batch` does
+that: contiguous ``SAMPLE2`` runs come out as columnar :class:`SampleBatch`
+objects (``t``/``tid``/``name_id``/``stack_id`` arrays), while every other
+record kind — and a torn tail straddling the chunk boundary — goes through
+the exact same scalar parse core as :meth:`Decoder.feed`.  numpy is an
+optional dependency here: it is imported lazily on first use (the in-target
+agent, which only encodes, never pays the import), and when it is absent
+``feed_batch`` simply degrades to the scalar path.
 """
 
 from __future__ import annotations
@@ -81,7 +95,53 @@ _BYE = struct.Struct("<Q")
 _STACKDEF_HDR = struct.Struct("<IHH")
 _SAMPLE2 = struct.Struct("<dQII")
 
+# Whole-record size of a SAMPLE2 on the wire: u32 len + u8 kind + payload.
+_S2_RECORD = _LEN.size + 1 + _SAMPLE2.size
+
 UNKNOWN = "?"
+
+# numpy is optional (vectorized batch decode only) and imported lazily: the
+# attach path's import budget must not pay ~100 ms for a dependency the
+# scalar fallback never touches.  The sentinel distinguishes "not probed yet"
+# from "probed, absent".
+_np_probed = False
+_np = None
+_sample2_dtype = None
+
+# Predicate cost per vectorized probe is bounded to this many records, so a
+# stream of non-SAMPLE2 records (cold-start STRDEF/STACKDEF bursts) costs
+# O(records) total instead of O(records^2) per chunk, while genuine runs
+# amortize the probe over thousands of samples.
+_PROBE_MAX = 4096
+
+
+def _numpy():
+    """The numpy module, or None when unavailable (scalar fallback)."""
+    global _np_probed, _np, _sample2_dtype
+    if not _np_probed:
+        _np_probed = True
+        try:
+            import numpy
+        except ImportError:  # pragma: no cover - exercised via monkeypatch
+            numpy = None
+        _np = numpy
+        if numpy is not None:
+            # One structured view per SAMPLE2 run: field offsets address the
+            # raw record bytes in place (len prefix and kind byte included,
+            # so the same view validates framing and extracts columns).
+            _sample2_dtype = numpy.dtype(
+                {
+                    "names": ["len", "kind", "t", "tid", "name_id", "stack_id"],
+                    "formats": ["<u4", "u1", "<f8", "<u8", "<u4", "<u4"],
+                    "offsets": [0, 4, 5, 13, 21, 25],
+                    "itemsize": _S2_RECORD,
+                }
+            )
+    return _np
+
+
+def numpy_available() -> bool:
+    return _numpy() is not None
 
 _MAX_STR_BYTES = 0xFFFF  # STRDEF length field is u16
 
@@ -147,6 +207,34 @@ class Rusage:
 @dataclass
 class Bye:
     n_ticks: int
+
+
+class SampleBatch:
+    """A columnar run of ``SAMPLE2`` records, in stream order.
+
+    Produced by :meth:`Decoder.feed_batch`: ``t`` (f8), ``tid`` (u8),
+    ``name_id`` (u4) and ``stack_id`` (u4) are equal-length numpy arrays —
+    field views of one packed structured copy (the decoder's receive buffer
+    is trimmed after the batch is emitted, so the columns must not alias
+    it).  The ``decoder`` reference
+    resolves the id columns against the live intern tables —
+    :meth:`Decoder.thread_name` and :meth:`Decoder.batch_stack` — which is
+    safe because ids are append-only and the batch is consumed before any
+    later chunk can redefine the tables (only a re-attach replaces them, and
+    that replaces the whole decoder).
+    """
+
+    __slots__ = ("t", "tid", "name_id", "stack_id", "decoder")
+
+    def __init__(self, t, tid, name_id, stack_id, decoder: "Decoder"):
+        self.t = t
+        self.tid = tid
+        self.name_id = name_id
+        self.stack_id = stack_id
+        self.decoder = decoder
+
+    def __len__(self) -> int:
+        return len(self.t)
 
 
 Event = Union[Hello, RawSample, Rusage, Bye]
@@ -359,6 +447,103 @@ class Decoder:
                     yield ev
         finally:
             del buf[:off]
+
+    def feed_batch(self, data: bytes) -> Iterator[Union[Event, SampleBatch]]:
+        """Like :meth:`feed`, but contiguous ``SAMPLE2`` runs come out as
+        columnar :class:`SampleBatch` objects instead of per-record
+        :class:`RawSample` events.
+
+        A run is detected with one ``np.frombuffer`` structured view over the
+        buffered bytes: from a known record boundary, every 29-byte stride
+        whose ``len``/``kind`` fields read ``(25, SAMPLE2)`` is — by framing
+        induction — a genuine record, and the first stride that does not ends
+        the run.  Everything else (defs, hello/rusage/bye, v1 samples,
+        corrupt records, a torn tail) goes through the scalar parse core,
+        byte-for-byte identical to :meth:`feed`.  Runs are coalesced across
+        non-yielding records (``STRDEF``/``STACKDEF``/unknown kinds): moving
+        a definition ahead of the samples *preceding* it is safe because ids
+        are append-only and a sample can only reference an id defined before
+        it.  The pending batch is flushed before any yielded event, so the
+        consumer observes samples and events in stream order.
+
+        Without numpy this degrades to the scalar path (same yields as
+        :meth:`feed`).
+        """
+        np = _numpy()
+        if np is None:
+            yield from self.feed(data)
+            return
+        self._buf.extend(data)
+        buf = self._buf
+        off = 0
+        pending: list = []  # structured-run copies awaiting one flush
+
+        def flush() -> Optional[SampleBatch]:
+            if not pending:
+                return None
+            arr = pending[0] if len(pending) == 1 else np.concatenate(pending)
+            pending.clear()
+            # Field views of one packed structured array: zero extra copies
+            # per flush, and consumers (`bincount` grouping, `tolist` for the
+            # timeline) take strided views as-is.
+            return SampleBatch(arr["t"], arr["tid"], arr["name_id"], arr["stack_id"], self)
+
+        try:
+            while True:
+                remaining = len(buf) - off
+                if remaining < _LEN.size:
+                    break
+                (n,) = _LEN.unpack_from(buf, off)
+                if n == _SAMPLE2.size + 1 and remaining >= _S2_RECORD and buf[off + _LEN.size] == K_SAMPLE2:
+                    # Front record is a SAMPLE2: probe the run vectorized.
+                    kmax = min(remaining // _S2_RECORD, _PROBE_MAX)
+                    arr = np.frombuffer(buf, dtype=_sample2_dtype, count=kmax, offset=off)
+                    ok = (arr["len"] == _SAMPLE2.size + 1) & (arr["kind"] == K_SAMPLE2)
+                    end_at = np.flatnonzero(~ok)
+                    k = int(end_at[0]) if end_at.size else kmax
+                    # One structured copy materializes the run; every view
+                    # into the bytearray is dropped before the finally-trim
+                    # (a live export would make `del buf[:off]` raise
+                    # BufferError).
+                    pending.append(arr[:k].copy())
+                    arr = ok = end_at = None  # noqa: F841
+                    off += k * _S2_RECORD
+                    continue
+                if remaining < _LEN.size + n:
+                    break
+                start = off + _LEN.size
+                off = start + n
+                ev = self._decode(buf[start], buf, start + 1, off)
+                if ev is not None:
+                    batch = flush()
+                    if batch is not None:
+                        yield batch
+                    yield ev
+        finally:
+            del buf[:off]
+        batch = flush()
+        if batch is not None:
+            yield batch
+
+    def thread_name(self, name_id: int) -> str:
+        """Resolve a ``SampleBatch.name_id`` against the string table."""
+        return self._strings.get(name_id, UNKNOWN)
+
+    def batch_stack(self, stack_id: int, n: int = 1) -> list[RawFrame]:
+        """Frames for a ``SampleBatch.stack_id`` covering ``n`` samples.
+
+        Mirrors the scalar SAMPLE2 decode's degraded-mode accounting: an
+        unknown or degraded stack id resolves to the shared ``"?"``
+        placeholder and bumps ``unknown_stack_refs`` once per *sample*, so
+        batch and scalar ingestion report identical loss counters.
+        """
+        frames = self._stacks.get(stack_id)
+        if frames is None:
+            self.unknown_stack_refs += n
+            return self._unknown_stack
+        if frames is self._unknown_stack:
+            self.unknown_stack_refs += n
+        return frames
 
     def _decode(self, kind: int, buf: bytearray, off: int, end: int) -> Optional[Event]:
         """Decode one record whose payload spans ``buf[off:end]``.
