@@ -144,6 +144,12 @@ class SamplerConfig:
     # None -> auto: spawn `python -m repro.profilerd` iff no explicit spool
     # path was given (an explicit spool means an external daemon attaches).
     spawn_daemon: Optional[bool] = None
+    # Daemon backend: regional aggregator URL — the spawned daemon pushes
+    # every sealed epoch there (`attach --push`); node name defaults to the
+    # short hostname.  Ignored when an external daemon drains the spool
+    # (configure --push on that daemon instead).
+    push_url: Optional[str] = None
+    push_node: Optional[str] = None
 
 
 @runtime_checkable

@@ -440,6 +440,12 @@ class TimelineWriter:
     The purge is deferred to the first write so that merely constructing a
     writer — e.g. a daemon whose attach then times out — cannot destroy the
     previous run's history.
+
+    ``preserve=True`` opts out of the purge for writers that *continue* a
+    ring across process restarts (the regional aggregator recovers its state
+    from the ring and keeps epoch numbering monotonic, so the old segments
+    stay valid history); retention still unlinks the oldest segments past
+    ``max_segments``.
     """
 
     def __init__(
@@ -448,6 +454,7 @@ class TimelineWriter:
         epochs_per_segment: int = 16,
         max_segments: int = 64,
         fsync: bool = False,
+        preserve: bool = False,
     ):
         if epochs_per_segment < 1 or max_segments < 1:
             raise ValueError("epochs_per_segment and max_segments must be >= 1")
@@ -456,7 +463,7 @@ class TimelineWriter:
         self.max_segments = max_segments
         self.fsync = fsync
         os.makedirs(dir_path, exist_ok=True)
-        self._purged = False
+        self._purged = preserve
         self._f = None
         self._tab = _StringTable()
         self._path_tab: dict[int, int] = {}  # id(chain) -> per-segment path id

@@ -19,13 +19,19 @@ children only publish raw frames to per-attempt spools (they pick the daemon
 backend up from ``REPRO_PROFILERD_SPOOL``, no config change needed), and the
 single daemon discovers each spool as it appears, aggregates every target
 out-of-process into per-target trees plus a continuously merged fleet tree
-(``fleet.d/tree.json``), and re-attaches across child restarts.  At
-rendezvous (job end) the daemon gets SIGTERM (clean final drain + publish)
-and the merge step just collects the already-merged fleet tree — for
-co-located workers the rendezvous merge is a no-op; ``CallTree.merge``
-across ``*.d`` dirs only does real work when multiple nodes' daemons
-contributed.  This is the paper's single-external-observer design at node
-scope, with zero profiling work inside any trainer.
+(``fleet.d/tree.json``), and re-attaches across child restarts.
+
+**Multi-node merge** goes through the regional aggregator: the shared daemon
+is spawned with ``--push`` at an aggregator URL (``aggregator_url`` for an
+external ``profilerd aggregate``, or ``aggregate=True`` to run one in-process
+under ``profile_dir/region.d``), every sealed epoch streams there as a
+CRC-framed delta, and rendezvous just collects the aggregator's continuously
+merged fleet tree — no file copying between nodes.  The legacy file-copy
+rendezvous (``CallTree.merge`` across ``*.d`` dirs under a shared
+``profile_dir``) remains as the documented fallback when no aggregator is
+configured, and as the recovery path when an external aggregator is
+unreachable at rendezvous.  This is the paper's single-external-observer
+design at node scope, with zero profiling work inside any trainer.
 
 On a real multi-pod deployment this wraps the per-host ``jax.distributed``
 bring-up; in this container it supervises local subprocesses, and the tests
@@ -56,6 +62,17 @@ class LaunchConfig:
     # per-attempt spools land here and the fleet tree merges at rendezvous.
     profile_dir: Optional[str] = None
     profile_period_s: float = 0.2
+    # Push every sealed epoch to this regional aggregator (an external
+    # ``profilerd aggregate`` endpoint); rendezvous collects the merged
+    # fleet tree from it instead of copying files between nodes.
+    aggregator_url: Optional[str] = None
+    # Run the regional aggregator in-process (under profile_dir/region.d)
+    # when no external URL is given — single-supervisor deployments get the
+    # push plane without operating a second service.
+    aggregate: bool = False
+    # Node name reported to the aggregator (defaults to the short hostname).
+    node_name: Optional[str] = None
+    region: str = "region"
     # When set (with profile_dir), serve the rendezvous-merged fleet tree
     # over the profilerd HTTP query plane on this port (0 = ephemeral) once
     # the job ends; the server runs on a daemon thread (see Launcher.server).
@@ -78,6 +95,8 @@ class Launcher:
         self.cfg = cfg
         self.report = LaunchReport()
         self.server = None  # ProfileServer over the merged profile (serve_port)
+        self.aggregator = None  # in-process regional Aggregator (aggregate=True)
+        self._agg_url: Optional[str] = None  # effective push endpoint
         self._daemons: list[subprocess.Popen] = []
         if cfg.profile_dir and not os.path.isabs(cfg.profile_dir):
             # The launcher, the daemon (cwd=workdir), and the child all touch
@@ -122,6 +141,7 @@ class Launcher:
         from repro.profilerd.daemon import spawn_attached_daemon
 
         os.makedirs(self.cfg.profile_dir, exist_ok=True)
+        self._ensure_aggregator()
         proc = spawn_attached_daemon(
             watch_dir=self.cfg.profile_dir,
             out_dir=os.path.join(self.cfg.profile_dir, "fleet.d"),
@@ -130,36 +150,128 @@ class Launcher:
             # watch daemon that has no BYE to exit on.
             exit_with_pid=os.getpid(),
             cwd=self.cfg.workdir,
+            push=self._agg_url,
+            push_node=self.cfg.node_name,
         )
         self._daemons.append(proc)
         self.report.log(f"profilerd daemon watching {self.cfg.profile_dir} (one per node)")
+        if self._agg_url:
+            self.report.log(f"daemon pushes sealed epochs to {self._agg_url}")
+
+    def _ensure_aggregator(self) -> None:
+        """Resolve the push endpoint: external URL, or an in-process one.
+
+        ``aggregate=True`` without an ``aggregator_url`` starts the regional
+        aggregator inside the launcher (ephemeral port, artifacts under
+        ``profile_dir/region.d``) so a single supervisor gets the push plane
+        without running ``profilerd aggregate`` as a separate service.
+        """
+        cfg = self.cfg
+        if self._agg_url is not None or (not cfg.aggregator_url and not cfg.aggregate):
+            return
+        if cfg.aggregator_url:
+            self._agg_url = cfg.aggregator_url
+            return
+        from repro.profilerd.aggregator import Aggregator, AggregatorConfig
+
+        try:
+            self.aggregator = Aggregator(
+                AggregatorConfig(
+                    out_dir=os.path.join(cfg.profile_dir, "region.d"),
+                    region=cfg.region,
+                    stall_floor_s=max(cfg.heartbeat_timeout_s, 1.0),
+                )
+            )
+            self._agg_url = self.aggregator.enable_serving().url
+        except OSError as e:  # no listening socket: fall back to file copy
+            self.report.log(f"in-process aggregator failed ({e}); file-copy rendezvous")
+            self.aggregator = None
+            return
+        self.report.log(f"in-process aggregator ({cfg.region}) at {self._agg_url}")
 
     def _rendezvous_merge(self) -> Optional[str]:
-        """Collect the fleet tree(s) the node daemon(s) published.
+        """Collect the fleet tree at job end.
 
-        The shared daemon already merged all co-located targets into
-        ``fleet.d/tree.json``, so with one node this loop is a pass-through;
-        ``CallTree.merge`` only does real work across multiple nodes' out
-        dirs (or legacy per-attempt ``*.spool.d`` layouts).
+        With an aggregator configured (external or in-process) the merged
+        tree is *already there* — every node's daemon pushed its sealed
+        epochs — so rendezvous is one collect call.  Without one, fall back
+        to the legacy file-copy merge across ``*.d`` dirs under the shared
+        ``profile_dir`` (and use the same fallback if an external aggregator
+        is unreachable: the job result must still land).
         """
         if not self.cfg.profile_dir:
             return None
         for d in self._daemons:
             # A --watch daemon has no BYE to exit on: SIGTERM asks it for a
-            # clean final drain + seal + publish.
+            # clean final drain + seal + publish (and, with --push, a forced
+            # final flush of the spill queue to the aggregator).
             d.terminate()
             try:
                 d.wait(timeout=15.0)
             except subprocess.TimeoutExpired:
                 d.kill()
                 d.wait()
+        out = self._collect_from_aggregator() if self._agg_url else None
+        if out is None:
+            out = self._merge_host_trees()
+        if out is None:
+            return None
+        self._surface_device_tree()
+        self._merge_timelines()
+        self._serve_merged()
+        return out
+
+    def _collect_from_aggregator(self) -> Optional[str]:
+        """The aggregator's continuously merged fleet tree -> merged_tree.json.
+
+        In-process: seal + publish + read directly.  External: one GET of
+        ``/tree?fmt=json`` (the export schema round-trips through
+        ``CallTree.from_json``).  Returns None on failure so the caller can
+        fall back to the file-copy merge.
+        """
+        from repro.core.calltree import CallTree
+
+        merged = None
+        if self.aggregator is not None:
+            self.aggregator.seal_fleet_epoch(force=True)
+            self.aggregator.publish()
+            merged = self.aggregator.fleet_tree()
+            self.aggregator.close()
+            src = "in-process aggregator"
+        else:
+            import urllib.request
+
+            url = self._agg_url.rstrip("/") + "/tree?fmt=json"
+            try:
+                with urllib.request.urlopen(url, timeout=10.0) as resp:
+                    merged = CallTree.from_json(resp.read().decode("utf-8"))
+            except (OSError, ValueError, KeyError) as e:
+                self.report.log(f"rendezvous: aggregator fetch failed ({e}); file-copy fallback")
+                return None
+            src = self._agg_url
+        if merged is None or not merged.root.children:
+            self.report.log("rendezvous: aggregator holds no epochs; file-copy fallback")
+            return None
+        out = os.path.join(self.cfg.profile_dir, "merged_tree.json")
+        with open(out, "w") as f:
+            f.write(merged.to_json())
+        self.report.log(f"rendezvous: fleet tree from {src} -> {out}")
+        return out
+
+    def _merge_host_trees(self) -> Optional[str]:
+        """Legacy file-copy rendezvous: merge ``*.d/tree.json`` dumps.
+
+        The documented fallback for deployments without an aggregator — all
+        nodes' daemons must share (or rsync into) ``profile_dir``.  With one
+        node this loop is a pass-through of ``fleet.d/tree.json``.
+        """
         from repro.core.calltree import CallNode, CallTree
 
         merged = CallTree()
         n = 0
         for entry in sorted(os.listdir(self.cfg.profile_dir)):
             path = os.path.join(self.cfg.profile_dir, entry, "tree.json")
-            if not entry.endswith(".d") or not os.path.exists(path):
+            if not entry.endswith(".d") or entry == "region.d" or not os.path.exists(path):
                 continue
             try:
                 with open(path) as f:
@@ -173,9 +285,6 @@ class Launcher:
         with open(out, "w") as f:
             f.write(merged.to_json())
         self.report.log(f"rendezvous: merged {n} host tree(s) -> {out}")
-        self._surface_device_tree()
-        self._merge_timelines()
-        self._serve_merged()
         return out
 
     def _surface_device_tree(self) -> None:
@@ -255,7 +364,9 @@ class Launcher:
         hosts = []  # per host: {"it": epoch iterator, "peek", "meta", "cum"}
         for entry in sorted(os.listdir(self.cfg.profile_dir)):
             tdir = os.path.join(self.cfg.profile_dir, entry, "timeline")
-            if entry.endswith(".d") and is_timeline_dir(tdir):
+            # region.d is the aggregator's out dir: its ring already IS the
+            # fleet sum, so folding it in would double-count every node.
+            if entry.endswith(".d") and entry != "region.d" and is_timeline_dir(tdir):
                 it = TimelineReader(tdir).epochs()
                 peek = next(it, None)
                 if peek is not None:

@@ -162,6 +162,11 @@ def main():
                     help="profiler backend (daemon = out-of-process repro.profilerd)")
     ap.add_argument("--spool", default=None,
                     help="daemon backend: spool path for an externally-attached profilerd")
+    ap.add_argument("--push", default=None, metavar="URL",
+                    help="daemon backend: regional aggregator the spawned "
+                         "profilerd pushes sealed epochs to (profilerd aggregate)")
+    ap.add_argument("--push-node", default=None,
+                    help="node name reported to the aggregator (default: hostname)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full)
@@ -174,7 +179,8 @@ def main():
     ]
     sampler = (
         make_sampler(
-            SamplerConfig(period_s=0.1, backend=args.backend, spool_path=args.spool)
+            SamplerConfig(period_s=0.1, backend=args.backend, spool_path=args.spool,
+                          push_url=args.push, push_node=args.push_node)
         )
         if args.profile
         else None

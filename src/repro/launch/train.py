@@ -66,6 +66,10 @@ class TrainJobConfig:
     # `python -m repro.profilerd attach --spool ...` drains it; when None a
     # daemon subprocess is spawned automatically.
     spool_path: Optional[str] = None
+    # Daemon backend: regional aggregator URL the spawned profilerd pushes
+    # sealed epochs to (`profilerd aggregate`); node name defaults to hostname.
+    push_url: Optional[str] = None
+    push_node: Optional[str] = None
     sample_period_s: float = 0.2
     watchdog_threshold: float = 0.95
     # Extra detector rules appended to the defaults (e.g. a pattern-scoped
@@ -110,6 +114,8 @@ class Trainer:
                     period_s=job.sample_period_s,
                     backend=job.profile_backend,
                     spool_path=job.spool_path,
+                    push_url=job.push_url,
+                    push_node=job.push_node,
                 )
             )
             if job.profile
@@ -258,6 +264,11 @@ def main():
                     help="profiler backend (daemon = out-of-process repro.profilerd)")
     ap.add_argument("--spool", default=None,
                     help="daemon backend: spool path for an externally-attached profilerd")
+    ap.add_argument("--push", default=None, metavar="URL",
+                    help="daemon backend: regional aggregator the spawned "
+                         "profilerd pushes sealed epochs to (profilerd aggregate)")
+    ap.add_argument("--push-node", default=None,
+                    help="node name reported to the aggregator (default: hostname)")
     args = ap.parse_args()
     job = TrainJobConfig(
         arch=args.arch,
@@ -271,6 +282,8 @@ def main():
         resume=not args.no_resume,
         profile_backend=args.backend,
         spool_path=args.spool,
+        push_url=args.push,
+        push_node=args.push_node,
     )
     summary = Trainer(job).run()
     print(json.dumps(summary, indent=1))

@@ -20,7 +20,12 @@ Subcommands:
              merged fleet tree stays at <out>/tree.json; a --watch daemon
              runs until SIGTERM, which triggers a clean final drain+publish);
              --follow prints live hot paths; --serve PORT exposes the live
-             HTTP query plane while attached.
+             HTTP query plane while attached; --push URL ships each sealed
+             epoch to a regional aggregator.
+  aggregate— regional fleet tier: ingest epochs POSTed by node daemons
+             (attach --push) into per-node timeline rings + a merged fleet
+             tree with downsampled long-term retention, serving the same
+             query plane (/targets goes region -> node -> target).
   serve    — HTTP API (/status /targets /tree /timeline /diff) over an
              *offline* profile artifact (daemon out dir — multi-target dirs
              serve /tree?target=NAME too — timeline ring, tree.json, .snap);
@@ -123,6 +128,8 @@ def cmd_attach(args) -> int:
         serve_port=args.serve,
         exit_with_pid=args.exit_with,
         device_tree=args.device_tree,
+        push_url=args.push,
+        push_node=args.push_node,
     )
     daemon = ProfilerDaemon(cfg)
     # SIGTERM = finish cleanly: final drain + seal + publish + report.  This
@@ -160,6 +167,44 @@ def cmd_attach(args) -> int:
         print(f"[profilerd] event: {json.dumps(ev)}")
     if tree.total() > 0:
         print(tree.render(min_share=0.02, max_depth=4))
+    return 0
+
+
+def cmd_aggregate(args) -> int:
+    from .aggregator import Aggregator, AggregatorConfig
+
+    cfg = AggregatorConfig(
+        out_dir=args.out,
+        region=args.region,
+        host=args.host,
+        port=args.port,
+        epoch_s=args.epoch,
+        coarse_every=args.coarse_every,
+        stall_factor=args.stall_factor,
+        max_seconds=args.max_seconds,
+    )
+    agg = Aggregator(cfg)
+    try:
+        agg.install_signal_handlers()
+    except ValueError:  # not the main thread (embedded use)
+        pass
+    try:
+        server = agg.enable_serving()
+    except OSError as e:
+        print(f"[profilerd] cannot bind {args.host}:{args.port}: {e}", file=sys.stderr)
+        return 1
+    print(f"[profilerd] aggregating region {cfg.region!r} at {server.url} "
+          f"(push endpoint {server.url}/push) -> {args.out}", flush=True)
+    try:
+        tree = agg.run()
+    except KeyboardInterrupt:
+        agg.request_stop()
+        tree = agg.fleet_tree()
+        agg.close()
+    status = agg.status()
+    print(f"[profilerd] fleet: nodes={status['n_nodes']} "
+          f"epochs={status['fleet']['epochs']} mass={tree.total():.6g} "
+          f"-> {os.path.join(args.out, 'tree.json')}")
     return 0
 
 
@@ -469,7 +514,31 @@ def main(argv=None) -> int:
                          "fleet's compiled program; enables plane=device|merged on the "
                          "query plane and roofline-annotated timeline epochs (default: "
                          "discover device_tree.json dropped into the out/target dirs)")
+    at.add_argument("--push", default=None, metavar="URL",
+                    help="POST each sealed epoch to a regional aggregator "
+                         "(profilerd aggregate) at this URL; outages spill "
+                         "locally and resync — ingest never blocks")
+    at.add_argument("--push-node", default=None, metavar="NAME",
+                    help="node name announced to the aggregator (default: hostname)")
     at.set_defaults(fn=cmd_attach)
+
+    ag = sub.add_parser("aggregate",
+                        help="regional aggregator: ingest epochs pushed by node "
+                             "daemons (attach --push) into a merged fleet profile")
+    ag.add_argument("--out", required=True, help="aggregator artifact dir")
+    ag.add_argument("--port", type=int, default=0,
+                    help="bind the ingest + query plane here (0 = ephemeral; "
+                         "the bound URL is printed on start)")
+    ag.add_argument("--host", default="127.0.0.1")
+    ag.add_argument("--region", default="region", help="region label for /targets and top")
+    ag.add_argument("--epoch", type=float, default=2.0,
+                    help="fleet seal + publish cadence seconds")
+    ag.add_argument("--coarse-every", type=int, default=8,
+                    help="long-horizon ring keeps one keyframe every N fleet epochs")
+    ag.add_argument("--stall-factor", type=float, default=1.5,
+                    help="NODE_STALLED after this many push intervals of silence")
+    ag.add_argument("--max-seconds", type=float, default=None, help="bound the run (tests)")
+    ag.set_defaults(fn=cmd_aggregate)
 
     sv = sub.add_parser("serve", help="HTTP API over an offline profile artifact")
     sv.add_argument("--profile", required=True,

@@ -201,6 +201,8 @@ class DaemonBackend:
                 self.out_dir,
                 interval_s=max(self.config.period_s, 0.2),
                 collapse_origins=self.config.collapse_origins,
+                push=self.config.push_url,
+                push_node=self.config.push_node,
             )
         return self
 

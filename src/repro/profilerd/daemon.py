@@ -119,6 +119,8 @@ def spawn_attached_daemon(
     threshold: Optional[float] = None,
     consecutive: Optional[int] = None,
     cwd: Optional[str] = None,
+    push: Optional[str] = None,
+    push_node: Optional[str] = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
 
@@ -158,6 +160,10 @@ def spawn_attached_daemon(
         cmd += ["--exit-with", str(exit_with_pid)]
     if device_tree is not None:
         cmd += ["--device-tree", device_tree]
+    if push is not None:
+        cmd += ["--push", push]
+    if push_node is not None:
+        cmd += ["--push-node", push_node]
     if threshold is not None:
         cmd += ["--threshold", str(threshold)]
     if consecutive is not None:
@@ -233,6 +239,14 @@ class DaemonConfig:
     # mode switches from the CountSealer fast path to the generic fleet ring
     # to carry them) and the live server gains plane=device|merged.
     device_tree: Optional[str] = None
+    # Fleet push plane: POST each sealed epoch (snapshot-codec framing, see
+    # repro.profilerd.push) to a regional aggregator.  None disables.  Push
+    # rides the epoch cadence, so it needs epoch_s > 0.
+    push_url: Optional[str] = None
+    push_node: Optional[str] = None  # default: the hostname
+    push_keyframe_every: int = 16
+    push_max_spill_bytes: int = 16 << 20
+    push_timeout_s: float = 5.0
 
     def resolved_out_dir(self) -> str:
         if self.out_dir:
@@ -330,6 +344,27 @@ class ProfilerDaemon:
         self._straggler = StragglerDetector(threshold=cfg.straggler_threshold)
         self._straggler_prev: dict[str, CallTree] = {}
         self._straggler_streaks: dict[str, int] = {}
+        # Fleet push plane: ship each sealed epoch to a regional aggregator.
+        # Outages spill locally (bounded) and resync via keyframe, so a dead
+        # aggregator never blocks ingest or loses epoch mass.
+        self._push = None
+        self._push_done = False
+        if cfg.push_url:
+            import socket
+
+            from .push import PushClient
+
+            self._push = PushClient(
+                cfg.push_url,
+                cfg.push_node or socket.gethostname().split(".")[0] or "node",
+                interval_hint_s=cfg.epoch_s if cfg.epoch_s > 0 else cfg.publish_interval_s,
+                keyframe_every=cfg.push_keyframe_every,
+                max_spill_bytes=cfg.push_max_spill_bytes,
+                timeout_s=cfg.push_timeout_s,
+                retry_base_s=cfg.attach_retry_base_s,
+                retry_cap_s=cfg.attach_retry_cap_s,
+                on_event=self._record_event,
+            )
         self._t_start = time.monotonic()
 
     # -- compatibility surface (classic single-target attributes) ------------
@@ -652,40 +687,58 @@ class ProfilerDaemon:
                         "wall_time": v.wall_time,
                     }
                 )
-        if self.fleet_writer is not None and self.sources:
-            fleet = CallTree()
-            for s in self.sources:
-                fleet.merge(s.tree)
-            if self._device_tree is not None:
-                # Annotations are ordinary metric keys, so the sealed epochs
-                # carry the device plane through the unchanged codec — and
-                # cross-run diff/check can gate on roofline regressions.
-                from repro.core.planes import annotate_tree
+        fleet: Optional[CallTree] = None
+        if (self.fleet_writer is not None or self._push is not None) and self.sources:
+            solo_src = self._solo_source()
+            if self.solo and solo_src is not None and self.fleet_writer is None:
+                # Solo push without a fleet ring: the lone source's live tree
+                # IS the fleet — no merge copy needed (push only reads it).
+                fleet = solo_src.tree
+            else:
+                fleet = CallTree()
+                for s in self.sources:
+                    fleet.merge(s.tree)
+                if self._device_tree is not None:
+                    # Annotations are ordinary metric keys, so the sealed
+                    # epochs carry the device plane through the unchanged
+                    # codec — and cross-run diff/check can gate on roofline
+                    # regressions.
+                    from repro.core.planes import annotate_tree
 
-                # The fleet tree was built fresh above, so annotate in place:
-                # the device plane's marginal cost is one attribution walk.
-                fleet = annotate_tree(fleet, self._device_tree, copy=False)
-            meta = EpochMeta(
-                self._fleet_epoch,
-                wall,
-                float(
-                    sum(s.sealer.node_count for s in self.sources if s.sealer)
-                    or fleet.node_count()  # solo device-tree mode: no sealers
-                ),
-            )
+                    # The fleet tree was built fresh above, so annotate in
+                    # place: the device plane's marginal cost is one
+                    # attribution walk.
+                    fleet = annotate_tree(fleet, self._device_tree, copy=False)
+        progress = float(
+            sum(s.sealer.node_count for s in self.sources if s.sealer)
+            or (fleet.node_count() if fleet is not None else 0)
+        )
+        if self.fleet_writer is not None and fleet is not None:
+            meta = EpochMeta(self._fleet_epoch, wall, progress)
             try:
                 if self._fleet_prev is None or self.fleet_writer.needs_keyframe():
                     self.fleet_writer.append_full(fleet, meta)
                 else:
                     self.fleet_writer.append_delta(fleet.diff(self._fleet_prev), meta)
+                self._fleet_prev = fleet
+                self._fleet_epoch += 1
             except OSError as e:
                 self._record_event(
                     {"kind": "TIMELINE_WRITE_FAILED", "target": "<fleet>", "path": [],
                      "share": 0.0, "error": str(e), "wall_time": wall}
                 )
-                return
-            self._fleet_prev = fleet
-            self._fleet_epoch += 1
+        if self._push is not None and fleet is not None:
+            # Ship this epoch to the regional aggregator.  The client keeps
+            # its own cumulative shadow (decoupled from the local ring's
+            # keyframe cadence), spills through outages, and resyncs with a
+            # K_FULL — a dead aggregator costs bounded memory, zero mass.
+            self._push.push_epoch(
+                fleet,
+                wall_time=wall,
+                progress=progress,
+                targets=[s.name for s in self.sources],
+                done=self._push_done,
+            )
 
     def _check_stalls(self) -> None:
         for s in self.sources:
@@ -947,6 +1000,8 @@ class ProfilerDaemon:
                 for row in self.spools.attach_failure_rows()
             ],
             "device_plane": self._device_tree is not None,
+            "node": self._push.node if self._push is not None else None,
+            "push": self._push.stats() if self._push is not None else None,
             "targets": {s.name: s.status_row() for s in srcs},
             "hot_paths": [
                 {"path": list(p), "share": round(s, 4)}
@@ -1040,6 +1095,7 @@ class ProfilerDaemon:
                 break
             time.sleep(self.cfg.drain_interval_s)
         self.drain()  # salvage whatever dead/late targets left behind
+        self._push_done = True  # the final push announces a clean shutdown
         self.seal_epoch()  # final epoch: short runs still leave a timeline
         self.publish()
         if on_publish is not None:

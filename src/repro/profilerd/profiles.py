@@ -12,11 +12,13 @@ HTTP server's offline mode.  A "profile" is any of:
 
 from __future__ import annotations
 
+import json
 import os
 
 TIMELINE_DIRNAME = "timeline"
 TARGETS_DIRNAME = "targets"  # multi-target daemon: per-target artifact dirs
 DEVICE_TREE_FILENAME = "device_tree.json"  # device-plane artifact beside a profile
+REGION_FILENAME = "region.json"  # aggregator out dir: region -> node -> target map
 
 
 class ProfileLoadError(RuntimeError):
@@ -155,6 +157,27 @@ def load_device_plane(path: str, target: str | None = None):
         return load_device_tree(p)
     except (OSError, ValueError, KeyError) as e:
         raise ProfileLoadError(f"{p}: unreadable device tree: {e}") from None
+
+
+def load_region(path: str):
+    """The aggregator's ``region.json`` hierarchy beside a profile, or None.
+
+    Shape: ``{"region": <name>, "nodes": [{"name": ..., "targets": [...]},
+    ...]}`` — written by ``profilerd aggregate`` every publish window so the
+    offline query plane can serve hierarchical ``/targets`` from the same
+    artifact dir.
+    """
+    if not os.path.isdir(path):
+        return None
+    p = os.path.join(path, REGION_FILENAME)
+    try:
+        with open(p) as f:
+            data = json.load(f)
+    except OSError:
+        return None
+    except ValueError as e:
+        raise ProfileLoadError(f"{p}: unreadable region map: {e}") from None
+    return data if isinstance(data, dict) else None
 
 
 def timeline_dir_of(path: str):

@@ -65,6 +65,7 @@ from .profiles import (
     list_profile_targets,
     load_device_plane,
     load_profile,
+    load_region,
     profile_mtime,
     target_profile_dir,
     timeline_dir_of,
@@ -186,6 +187,18 @@ class LiveSource:
             )
         return out
 
+    def targets_hierarchy(self) -> dict:
+        """Region -> node -> target.  A node daemon is one node deep: its
+        own targets under the node name it pushes (or would push) as."""
+        status, _ = self.shared.snapshot()
+        rows = self.targets()
+        node = status.get("node") or "local"
+        return {
+            "region": status.get("region"),
+            "targets": rows,
+            "nodes": [{"name": node, "targets": rows}],
+        }
+
     def device_tree(self, target: Optional[str] = None) -> Optional[CallTree]:
         # One device artifact per fleet: every co-located target runs the
         # same compiled program, so the per-target plane is the fleet plane.
@@ -278,6 +291,28 @@ class OfflineSource:
             )
         return rows
 
+    def targets_hierarchy(self) -> dict:
+        """An aggregator out dir serves its ``region.json`` map; any other
+        profile is a single implicit node holding its own targets."""
+        rows = self.targets()
+        region = load_region(self.path)
+        if region is not None:
+            nodes = []
+            by_name = {r["name"]: r for r in rows}
+            for node in region.get("nodes") or []:
+                row = dict(node)
+                row["targets"] = [
+                    t if isinstance(t, dict) else {"name": t}
+                    for t in node.get("targets") or []
+                ]
+                stats = by_name.get(node.get("name"))
+                if stats is not None:
+                    row.setdefault("n_stacks", stats["n_stacks"])
+                nodes.append(row)
+            return {"region": region.get("region"), "targets": rows, "nodes": nodes}
+        name = os.path.basename(self.path.rstrip(os.sep)) or self.path
+        return {"region": None, "targets": rows, "nodes": [{"name": name, "targets": rows}]}
+
     def status(self) -> dict:
         tree = self.tree()
         targets = list_profile_targets(self.path)
@@ -349,6 +384,47 @@ class _Handler(BaseHTTPRequestHandler):
             return self._send(500, f"internal error: {e!r}\n", "text/plain; charset=utf-8")
         self._send(200, body, ctype)
 
+    def do_POST(self):  # noqa: N802 - BaseHTTPRequestHandler API
+        """Push-plane ingest (``POST /push``), live only when the server was
+        started with a ``push_sink`` (the regional aggregator).  Anything
+        malformed is a clean 4xx; the sink decides applied/duplicate."""
+        url = urlsplit(self.path)
+        sink = getattr(self.server, "push_sink", None)
+        if sink is None:
+            return self._send(405, "this server does not accept pushes\n",
+                              "text/plain; charset=utf-8")
+        if url.path != "/push":
+            return self._send(404, f"unknown POST endpoint {url.path}; try /push\n",
+                              "text/plain; charset=utf-8")
+        try:
+            length = int(self.headers.get("Content-Length") or 0)
+        except ValueError:
+            length = -1
+        if length <= 0:
+            return self._send(411, "need a Content-Length'd push body\n",
+                              "text/plain; charset=utf-8")
+        cap = getattr(self.server, "push_max_bytes", DEFAULT_MAX_BYTES)
+        if length > cap:
+            # Drain (bounded) so the client sees the 413 instead of a reset
+            # connection, then refuse.
+            remaining = min(length, 4 * cap)
+            while remaining > 0:
+                chunk = self.rfile.read(min(65536, remaining))
+                if not chunk:
+                    break
+                remaining -= len(chunk)
+            self.close_connection = True
+            return self._send(413, f"push body of {length} bytes exceeds {cap}\n",
+                              "text/plain; charset=utf-8")
+        body = self.rfile.read(length)
+        if len(body) != length:
+            return self._send(400, "truncated push body\n", "text/plain; charset=utf-8")
+        try:
+            code, payload = sink(self.headers, body)
+        except Exception as e:  # the ingest plane must not kill the thread
+            return self._send(500, f"internal error: {e!r}\n", "text/plain; charset=utf-8")
+        self._send(code, json.dumps(payload) + "\n", "application/json")
+
     def _send(self, code: int, body: str, ctype: str) -> None:
         payload = body.encode("utf-8", errors="replace")
         if len(payload) > self.server.max_bytes:
@@ -382,8 +458,12 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _targets(self) -> str:
         source = self.server.source
+        if hasattr(source, "targets_hierarchy"):
+            # Hierarchical shape: flat `targets` rows stay for existing
+            # consumers, `region`/`nodes` carry the fleet structure.
+            return json.dumps(source.targets_hierarchy(), indent=1)
         rows = source.targets() if hasattr(source, "targets") else []
-        return json.dumps({"targets": rows}, indent=1)
+        return json.dumps({"targets": rows, "region": None, "nodes": []}, indent=1)
 
     def _baseline_source(self, path: str) -> "OfflineSource":
         """Baseline profiles get the same mtime cache as the served profile —
@@ -628,6 +708,8 @@ class ProfileServer:
         baseline: Optional[str] = None,
         max_bytes: int = DEFAULT_MAX_BYTES,
         verbose: bool = False,
+        push_sink=None,
+        push_max_bytes: int = 8 << 20,
     ):
         self.source = source
         self._httpd = _Server((host, port), _Handler)
@@ -635,6 +717,10 @@ class ProfileServer:
         self._httpd.baseline = baseline
         self._httpd.max_bytes = max_bytes
         self._httpd.verbose = verbose
+        # push_sink(headers, body) -> (status, json_dict): the aggregator's
+        # ingest hook.  None (the default) keeps this a read-only plane.
+        self._httpd.push_sink = push_sink
+        self._httpd.push_max_bytes = push_max_bytes
         self._httpd._timeline_cache = {}
         self._httpd._baseline_sources = {}
         self._thread: Optional[threading.Thread] = None
@@ -718,8 +804,54 @@ def render_plane_rows(tree: CallTree, plane: str, k: int = 10) -> str:
     return "\n".join(lines)
 
 
+def render_fleet_rollup(status: dict) -> str:
+    """The aggregator's node table for ``profilerd top`` — one row per node
+    in the region, plus the fleet totals line."""
+    fleet = status.get("fleet") or {}
+    lines = [
+        f"region={status.get('region', '?')} nodes={status.get('n_nodes', 0)} "
+        f"targets={status.get('n_targets', 0)} fleet_epochs={fleet.get('epochs', 0)} "
+        f"mass={fleet.get('mass', 0):.6g} applied={fleet.get('epochs_applied', 0)} "
+        f"dup={fleet.get('duplicates', 0)} bytes={fleet.get('bytes', 0)}",
+        "",
+        f"{'NODE':<18} {'STATE':<8} {'EPOCHS':>7} {'DUP':>4} {'MASS':>10} "
+        f"{'AGE(s)':>7} {'INC':>4}  TARGETS",
+    ]
+    for name, row in sorted((status.get("nodes") or {}).items()):
+        age = row.get("last_push_age_s")
+        lines.append(
+            f"{name:<18.18} {row.get('state', '?'):<8} "
+            f"{row.get('epochs_applied', 0):>7} {row.get('duplicates', 0):>4} "
+            f"{row.get('mass', 0):>10.6g} "
+            f"{age if age is not None else '--':>7} "
+            f"{row.get('incarnations', 0):>4}  {','.join(row.get('targets') or []) or '--'}"
+        )
+    if not status.get("nodes"):
+        lines.append("  (no nodes have pushed yet)")
+    return "\n".join(lines)
+
+
 def render_top(status: dict, base_url: str = "", k: int = 10) -> str:
     """One refresh of the hottest paths + verdicts, `top(1)`-style."""
+    if status.get("aggregator"):
+        state = "STALLED" if status.get("stalled") else ("done" if status.get("done") else "live")
+        head = (
+            f"profilerd top — {base_url}  [aggregator region={status.get('region', '?')}] "
+            f"[{state}]\n" + render_fleet_rollup(status)
+        )
+        lines = [head, "", f"{'SHARE':>8}  HOTTEST PATHS (fleet)"]
+        for hp in status.get("hot_paths", [])[:k]:
+            lines.append(f"{hp['share']:8.2%}  {'/'.join(hp['path'])}")
+        if not status.get("hot_paths"):
+            lines.append("      --  (no samples yet)")
+        events = status.get("events", [])
+        if events:
+            lines += ["", "FLEET EVENTS (newest last)"]
+            for ev in events[-5:]:
+                lines.append(
+                    f"  {ev.get('kind', '?'):<18} node={ev.get('target', '-')}"
+                )
+        return "\n".join(lines)
     if status.get("offline"):
         head = (
             f"profilerd top — {base_url}  [offline profile {status.get('profile', '?')}]\n"
