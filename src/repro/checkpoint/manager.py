@@ -25,7 +25,8 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Callable, Optional
+from collections.abc import Callable
+from typing import Any
 
 import numpy as np
 
@@ -82,12 +83,12 @@ class CheckpointManager:
         self.fsync = fsync
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
-        self._pending: Optional[threading.Thread] = None
+        self._pending: threading.Thread | None = None
         self.saved_steps: list[int] = []
 
     # -- save --------------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None, blocking: bool = False, tag: str = "periodic") -> None:
+    def save(self, step: int, tree: Any, *, extra: dict | None = None, blocking: bool = False, tag: str = "periodic") -> None:
         # Materialize on host *before* handing to the writer thread so the
         # train loop can donate/overwrite device buffers immediately.
         host_tree = jax.device_get(tree) if jax is not None else tree
@@ -172,7 +173,7 @@ class CheckpointManager:
             flat[tuple(key.split(_SEP))] = np.load(os.path.join(path, key + ".npy"))
         return _unflatten(flat), manifest
 
-    def restore_latest(self) -> Optional[tuple[int, Any, dict]]:
+    def restore_latest(self) -> tuple[int, Any, dict] | None:
         steps = self.list_steps()
         if not steps:
             return None

@@ -8,7 +8,7 @@ ever lowered via the dry-run (ShapeDtypeStruct stand-ins, no allocation).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from collections.abc import Callable
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -25,12 +25,12 @@ class ModelConfig:
     n_kv_heads: int
     d_ff: int
     vocab: int
-    head_dim_: Optional[int] = None  # explicit head dim (default d_model/n_heads)
+    head_dim_: int | None = None  # explicit head dim (default d_model/n_heads)
     act: str = "silu"
     qk_norm: bool = False
     tied_embeddings: bool = False
     # attention
-    window: Optional[int] = None  # sliding-window size for attn layers
+    window: int | None = None  # sliding-window size for attn layers
     pattern: tuple[str, ...] = ("attn",)  # layer-kind cycle
     rope_theta: float = 10000.0
     mrope: bool = False
@@ -44,7 +44,7 @@ class ModelConfig:
     dense_d_ff: int = 0
     moe_impl: str = "dense"  # dense (pjit dispatch) | shard_map (explicit EP a2a)
     # recurrent / ssm
-    lru_width: Optional[int] = None
+    lru_width: int | None = None
     conv_width: int = 4
     # execution
     chunk: int = 512  # q-chunk (attention) / time-chunk (mLSTM)

@@ -44,7 +44,7 @@ lane exists.
 from __future__ import annotations
 
 import json
-from typing import Callable, Iterable, Iterator, Mapping, Optional, Sequence, Union
+from collections.abc import Callable, Iterable, Iterator, Mapping, Sequence
 
 Metrics = dict[str, float]
 FramePredicate = Callable[[str], bool]
@@ -52,7 +52,7 @@ FramePredicate = Callable[[str], bool]
 SAMPLES = "samples"
 
 
-def _as_predicate(sel: Union[str, FramePredicate]) -> FramePredicate:
+def _as_predicate(sel: str | FramePredicate) -> FramePredicate:
     if callable(sel):
         return sel
     return lambda name: name == sel
@@ -66,9 +66,9 @@ class CallNode:
     def __init__(
         self,
         name: str,
-        metrics: Optional[Metrics] = None,
-        self_metrics: Optional[Metrics] = None,
-        children: Optional[dict[str, "CallNode"]] = None,
+        metrics: Metrics | None = None,
+        self_metrics: Metrics | None = None,
+        children: dict[str, "CallNode"] | None = None,
     ):
         self.name = name
         # Fast-lane pending counts, folded into the dicts on read.
@@ -197,12 +197,12 @@ class CallTree:
 
     ROOT = "<root>"
 
-    def __init__(self, root: Optional[CallNode] = None):
+    def __init__(self, root: CallNode | None = None):
         self.root = root if root is not None else CallNode(self.ROOT)
 
     # -- ingestion ------------------------------------------------------------
 
-    def add_stack(self, frames: Sequence[str], metrics: Optional[Mapping[str, float]] = None) -> None:
+    def add_stack(self, frames: Sequence[str], metrics: Mapping[str, float] | None = None) -> None:
         """Merge one sample. ``frames`` are ordered root -> leaf."""
         if metrics is None:
             # Host-plane default ({samples: 1}): take the float fast lane.
@@ -256,7 +256,7 @@ class CallTree:
         are dropped, so detector windows only see recent activity.
         """
 
-        def sub(now: CallNode, before: Optional[CallNode]) -> Optional[CallNode]:
+        def sub(now: CallNode, before: CallNode | None) -> CallNode | None:
             bm = before.metrics if before else {}
             bs = before.self_metrics if before else {}
             out = CallNode(now.name)
@@ -291,7 +291,7 @@ class CallTree:
         paper's flattened view of Fig. 7 (a=a1+a2, b=b1+b2, e=e1+e2 ...).
         """
         out: dict[str, float] = {}
-        for path, node in self.root.walk():
+        for _path, node in self.root.walk():
             if node is self.root:
                 continue
             out[node.name] = out.get(node.name, 0.0) + node.metrics.get(metric, 0.0)
@@ -317,7 +317,7 @@ class CallTree:
 
         return CallTree(trunc(self.root, 0))
 
-    def zoom(self, selector: Union[str, FramePredicate]) -> "CallTree":
+    def zoom(self, selector: str | FramePredicate) -> "CallTree":
         """Re-root at every node matching ``selector``; matching subtrees merge.
 
         This implements the paper's root-of-interest control (e.g. "all
@@ -341,8 +341,8 @@ class CallTree:
 
     def filtered(
         self,
-        whitelist: Optional[Iterable[str]] = None,
-        blacklist: Optional[Iterable[str]] = None,
+        whitelist: Iterable[str] | None = None,
+        blacklist: Iterable[str] | None = None,
         substring: bool = True,
     ) -> "CallTree":
         """White/blacklist view. A blacklisted node is removed with its subtree
@@ -355,7 +355,7 @@ class CallTree:
         def match(name: str, pats: Iterable[str]) -> bool:
             return any((p in name) if substring else (p == name) for p in pats)
 
-        def keep(node: CallNode) -> Optional[CallNode]:
+        def keep(node: CallNode) -> CallNode | None:
             if match(node.name, bl):
                 return None
             kept_children = {}

@@ -28,7 +28,7 @@ import time
 import traceback
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Mapping, Optional, Sequence
+from collections.abc import Callable, Mapping, Sequence
 
 from .calltree import SAMPLES, CallTree
 
@@ -68,8 +68,8 @@ class DominanceDetector:
 
     def __init__(
         self,
-        rules: Optional[Sequence[Rule]] = None,
-        on_anomaly: Optional[Sequence[Callable[[AnomalyEvent], None]]] = None,
+        rules: Sequence[Rule] | None = None,
+        on_anomaly: Sequence[Callable[[AnomalyEvent], None]] | None = None,
     ):
         self.rules = list(rules) if rules else [Rule()]
         self.callbacks: list[Callable[[AnomalyEvent], None]] = list(on_anomaly or [])
@@ -79,8 +79,8 @@ class DominanceDetector:
         # the component that has to survive a sick process.  Failures land
         # here and, when set, in ``on_callback_error(event, traceback_str)``.
         self.callback_failures: deque = deque(maxlen=32)
-        self.on_callback_error: Optional[Callable[[AnomalyEvent, str], None]] = None
-        self._prev: Optional[CallTree] = None
+        self.on_callback_error: Callable[[AnomalyEvent, str], None] | None = None
+        self._prev: CallTree | None = None
         self._streaks: dict[int, int] = {}
         self._window = 0
 
@@ -99,7 +99,7 @@ class DominanceDetector:
                 self._streaks[i] = 0
                 continue
             shares = window.shares(rule.metric, self_only=rule.self_only)
-            hit: Optional[tuple[tuple[str, ...], float]] = None
+            hit: tuple[tuple[str, ...], float] | None = None
             for path, share in shares.items():
                 if share >= rule.threshold and (not rule.pattern or any(rule.pattern in p for p in path)):
                     if hit is None or share > hit[1]:
@@ -232,16 +232,16 @@ class TrendDetector:
     Each distinct ``(kind, path, began_epoch)`` is reported once.
     """
 
-    def __init__(self, rule: Optional[TrendRule] = None):
+    def __init__(self, rule: TrendRule | None = None):
         self.rule = rule if rule is not None else TrendRule()
         self.events: list[TrendVerdict] = []
         self._epoch = -1
-        self._last_progress: Optional[float] = None
-        self._dom_path: Optional[tuple[str, ...]] = None
+        self._last_progress: float | None = None
+        self._dom_path: tuple[str, ...] | None = None
         self._dom_began = 0
-        self._stall_began: Optional[int] = None
-        self._drift_began: Optional[int] = None
-        self._livelock_active: Optional[tuple[tuple[str, ...], int]] = None
+        self._stall_began: int | None = None
+        self._drift_began: int | None = None
+        self._livelock_active: tuple[tuple[str, ...], int] | None = None
         self._baseline: deque = deque(maxlen=max(1, self.rule.baseline_window))
         self._emitted: set[tuple[str, tuple[str, ...], int]] = set()
 
@@ -251,18 +251,18 @@ class TrendDetector:
     def livelock_active(self) -> bool:
         return self._livelock_active is not None
 
-    def detections(self, kind: Optional[str] = None) -> list[TrendVerdict]:
+    def detections(self, kind: str | None = None) -> list[TrendVerdict]:
         if kind is None:
             return list(self.events)
         return [v for v in self.events if v.kind == kind]
 
-    def first_detection(self, kind: str) -> Optional[TrendVerdict]:
+    def first_detection(self, kind: str) -> TrendVerdict | None:
         for v in self.events:
             if v.kind == kind:
                 return v
         return None
 
-    def detection_latency(self, kind: str) -> Optional[int]:
+    def detection_latency(self, kind: str) -> int | None:
         """Epochs from onset to first verdict of ``kind`` (None if never)."""
         v = self.first_detection(kind)
         return None if v is None else v.latency_epochs
@@ -280,8 +280,8 @@ class TrendDetector:
         self,
         window: CallTree,
         progress: float = 0.0,
-        epoch: Optional[int] = None,
-        wall_time: Optional[float] = None,
+        epoch: int | None = None,
+        wall_time: float | None = None,
     ) -> list[TrendVerdict]:
         rule = self.rule
         self._epoch = epoch if epoch is not None else self._epoch + 1
@@ -303,7 +303,7 @@ class TrendDetector:
 
         # -- dominance / livelock -------------------------------------------
         shares = window.shares(rule.metric, self_only=rule.self_only)
-        top: Optional[tuple[tuple[str, ...], float]] = None
+        top: tuple[tuple[str, ...], float] | None = None
         for path, share in shares.items():
             if share >= rule.threshold and (top is None or share > top[1]):
                 top = (path, share)
@@ -414,7 +414,7 @@ class WatchdogLoop:
         import threading
 
         self._stop = threading.Event()
-        self._thread: Optional[object] = None
+        self._thread: object | None = None
         self._threading = threading
 
     def start(self) -> "WatchdogLoop":

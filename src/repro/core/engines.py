@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any
 
 import jax
 
@@ -103,7 +104,7 @@ def compare_engines(
     engines: Sequence[Engine],
     n_steps: int,
     make_args: Callable[[int], tuple],
-    sampler_factory: Optional[Callable[[], Any]] = None,
+    sampler_factory: Callable[[], Any] | None = None,
 ) -> list[dict]:
     """Run each engine for ``n_steps`` under (optionally) a fresh sampler.
 

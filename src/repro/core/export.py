@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import html as _html
 import json
-from typing import Iterator, Optional, Union
+from collections.abc import Iterator
 
 from .calltree import SAMPLES, CallNode, CallTree
 
@@ -229,7 +229,7 @@ def build_diff_tree(baseline: CallTree, candidate: CallTree, metric: str = SAMPL
     btot = baseline.total(metric) or 1.0
     ctot = candidate.total(metric) or 1.0
 
-    def rec(bnode: Optional[CallNode], cnode: Optional[CallNode], name: str) -> CallNode:
+    def rec(bnode: CallNode | None, cnode: CallNode | None, name: str) -> CallNode:
         bv = bnode.metrics.get(metric, 0.0) if bnode is not None else 0.0
         cv = cnode.metrics.get(metric, 0.0) if cnode is not None else 0.0
         bs = bnode.self_metrics.get(metric, 0.0) if bnode is not None else 0.0
@@ -443,7 +443,7 @@ def diff_flamegraph_html(
 # -- the view-routed export front door ---------------------------------------
 
 
-def resolve_view(view: Optional[Union[str, "object"]]):
+def resolve_view(view: str | object | None):
     """Normalize a view argument: name -> library ViewConfig, None passes."""
     from .report import ViewConfig
 
@@ -461,9 +461,9 @@ def resolve_view(view: Optional[Union[str, "object"]]):
 def prepare_view(
     tree: CallTree,
     view,
-    metric: Optional[str] = None,
-    fmt: Optional[str] = None,
-) -> tuple[CallTree, str, Optional[str]]:
+    metric: str | None = None,
+    fmt: str | None = None,
+) -> tuple[CallTree, str, str | None]:
     """Apply a view (zoom/filters/level **and** min_share pruning) exactly once.
 
     Returns ``(applied_tree, metric, marker)``: ``marker`` is non-None when a
@@ -496,8 +496,8 @@ def export_tree(
     tree: CallTree,
     fmt: str = "csv",
     *,
-    view: Optional[Union[str, "object"]] = None,
-    metric: Optional[str] = None,
+    view: str | object | None = None,
+    metric: str | None = None,
     title: str = "calltree",
     diff: bool = False,
     roofline: bool = False,

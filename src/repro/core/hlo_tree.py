@@ -30,7 +30,6 @@ import json
 import os
 import re
 from dataclasses import dataclass, field
-from typing import Optional
 
 from .calltree import CallTree
 
@@ -104,7 +103,7 @@ class HloOp:
     opcode: str
     shapes: list[tuple[str, tuple[int, ...]]]  # result (flattened if tuple)
     operands: list[str]
-    op_name: Optional[str]
+    op_name: str | None
     trip_count: int = 1
     called: list[str] = field(default_factory=list)
     attrs: str = ""
@@ -137,8 +136,8 @@ def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
 def parse_hlo_module(text: str) -> dict[str, HloComputation]:
     """Parse post-optimization HLO text into computations with a symbol table."""
     comps: dict[str, HloComputation] = {}
-    current: Optional[HloComputation] = None
-    entry_name: Optional[str] = None
+    current: HloComputation | None = None
+    entry_name: str | None = None
     for line in text.splitlines():
         stripped = line.strip()
         if not stripped:
@@ -240,8 +239,8 @@ def _conv_flops(op: HloOp, comp: HloComputation) -> float:
 def build_device_tree(
     hlo_text: str,
     *,
-    entry: Optional[str] = None,
-    step_name: Optional[str] = None,
+    entry: str | None = None,
+    step_name: str | None = None,
 ) -> CallTree:
     """Build the device-plane CallTree from compiled HLO text."""
     comps = parse_hlo_module(hlo_text)
@@ -338,7 +337,7 @@ def tree_from_compiled(compiled, **kw) -> CallTree:
 DEVICE_TREE_SCHEMA = "repro-device-tree/v1"
 
 
-def save_device_tree(tree: CallTree, path: str, *, meta: Optional[dict] = None) -> None:
+def save_device_tree(tree: CallTree, path: str, *, meta: dict | None = None) -> None:
     """Persist a device-plane tree as a versioned ``device_tree.json`` artifact.
 
     The write is atomic (tmp + rename): daemons and servers discover this file

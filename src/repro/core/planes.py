@@ -47,14 +47,15 @@ the jax-free CI jobs.
 from __future__ import annotations
 
 import weakref
-from typing import Mapping, Optional
+from collections.abc import Mapping
 
 from .calltree import CallNode, CallTree
 from .roofline import V5E, HardwareSpec
 
-PLANES = ("host", "device", "merged")
+PLANES = ("host", "device", "merged", "static")
 
 DEVICE_TREE_FILENAME = "device_tree.json"
+STATIC_TREE_FILENAME = "static_tree.json"
 
 # Device-plane counters grafted onto merged-plane host nodes (prefixed).
 HLO_KEYS = ("flops", "bytes", "coll_bytes", "ops")
@@ -70,7 +71,7 @@ class PlaneError(RuntimeError):
     """A requested plane cannot be served (typically: no device artifact)."""
 
 
-def missing_device_hint(profile: Optional[str] = None) -> str:
+def missing_device_hint(profile: str | None = None) -> str:
     where = f"beside the profile ({profile})" if profile else "beside the profile"
     return (
         f"no device plane: expected a {DEVICE_TREE_FILENAME} artifact {where}. "
@@ -80,11 +81,25 @@ def missing_device_hint(profile: Optional[str] = None) -> str:
     )
 
 
-def default_metric(plane: str, metric: Optional[str]) -> Optional[str]:
-    """The device tree has no ``samples``; default its metric to ``flops``."""
+def missing_static_hint(profile: str | None = None) -> str:
+    where = f"beside the profile ({profile})" if profile else "beside the profile"
+    return (
+        f"no static plane: expected a {STATIC_TREE_FILENAME} artifact {where}. "
+        f"Generate one with `python -m repro.analysis extract --out "
+        f"<profile>/{STATIC_TREE_FILENAME}`."
+    )
+
+
+def default_metric(plane: str, metric: str | None) -> str | None:
+    """Planes without ``samples`` fast-lane mass get a sensible default:
+    the device tree's is ``flops``, the static call graph's is ``defs``."""
     if metric:
         return metric
-    return "flops" if plane == "device" else metric
+    if plane == "device":
+        return "flops"
+    if plane == "static":
+        return "defs"
+    return metric
 
 
 def _norm(name: str) -> str:
@@ -137,7 +152,7 @@ def _device_index(device: CallTree) -> dict[str, tuple[float, float, float, floa
 
 def device_name_index(device: CallTree) -> dict[str, dict[str, float]]:
     """Flatten-view index: normalized node name -> summed inclusive HLO metrics."""
-    return {k: dict(zip(HLO_KEYS, v)) for k, v in _device_index(device).items()}
+    return {k: dict(zip(HLO_KEYS, v, strict=True)) for k, v in _device_index(device).items()}
 
 
 #: Memoized ``_norm``: frame names are interned by the ingest layer, so a
@@ -262,7 +277,7 @@ def annotate_tree(
     return merged
 
 
-def dominant_term(metrics: Mapping[str, float]) -> Optional[str]:
+def dominant_term(metrics: Mapping[str, float]) -> str | None:
     """The node's dominant roofline term, read back from annotation metrics."""
     best, best_v = None, 0.0
     for t in ROOFLINE_TERMS:
@@ -274,22 +289,28 @@ def dominant_term(metrics: Mapping[str, float]) -> Optional[str]:
 
 def select_plane(
     host: CallTree,
-    device: Optional[CallTree],
+    device: CallTree | None,
     plane: str,
     *,
     hw: HardwareSpec = V5E,
-    profile: Optional[str] = None,
+    profile: str | None = None,
+    static: CallTree | None = None,
 ) -> CallTree:
-    """Resolve one of the three plane views, or raise.
+    """Resolve one of the plane views, or raise.
 
     ``ValueError`` for an unknown plane name (caller bug / HTTP 400);
-    :class:`PlaneError` with a remedy hint when the device artifact is
-    missing (HTTP 404 / CLI exit 4 — never a vacuous empty view).
+    :class:`PlaneError` with a remedy hint when the plane's artifact
+    (device tree, static tree) is missing (HTTP 404 / CLI exit 4 — never a
+    vacuous empty view).
     """
     if plane not in PLANES:
         raise ValueError(f"unknown plane {plane!r} (choose from {', '.join(PLANES)})")
     if plane == "host":
         return host
+    if plane == "static":
+        if static is None:
+            raise PlaneError(missing_static_hint(profile))
+        return static
     if device is None:
         raise PlaneError(missing_device_hint(profile))
     if plane == "device":

@@ -14,7 +14,6 @@ import html
 import json
 import os
 from dataclasses import dataclass
-from typing import Optional
 
 from .calltree import SAMPLES, CallNode, CallTree
 
@@ -218,11 +217,11 @@ class ViewConfig:
     """One exploration config (artifact §G): root, fold level, filters."""
 
     name: str = "view"
-    root: Optional[str] = None  # zoom selector (substring of a node name)
+    root: str | None = None  # zoom selector (substring of a node name)
     level: int = -1  # -1 expands to leaves, n truncates (artifact semantics)
     metric: str = SAMPLES
-    whitelist: Optional[list[str]] = None
-    blacklist: Optional[list[str]] = None
+    whitelist: list[str] | None = None
+    blacklist: list[str] | None = None
     min_share: float = 0.0
 
     def apply(self, tree: CallTree) -> CallTree:
@@ -247,7 +246,7 @@ class ViewConfig:
             return True
         return bool(tree.zoom(lambda n, r=self.root: r in n).root.children)
 
-    def empty_marker(self, tree: CallTree) -> Optional[str]:
+    def empty_marker(self, tree: CallTree) -> str | None:
         """The marker row this view's emptiness deserves, or ``None``.
 
         One source of truth for :meth:`to_csv` and the ``profilerd export``

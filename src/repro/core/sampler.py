@@ -35,7 +35,8 @@ import sys
 import threading
 import time
 from dataclasses import dataclass
-from typing import Optional, Protocol, Sequence, runtime_checkable
+from collections.abc import Sequence
+from typing import Protocol, runtime_checkable
 
 from .calltree import CallTree
 
@@ -133,23 +134,23 @@ class SamplerConfig:
     # "daemon": raw-frame publisher + out-of-process repro.profilerd daemon.
     backend: str = "thread"
     # Daemon backend: spool file the agent publishes to (default: a temp path).
-    spool_path: Optional[str] = None
+    spool_path: str | None = None
     spool_bytes: int = 4 << 20
     # Daemon backend: wire protocol the agent emits (2 = stack-interned
     # STACKDEF/SAMPLE2 records, 1 = legacy per-frame SAMPLE records).
     wire_version: int = 2
     # Daemon backend: where the daemon publishes status/tree/report files
     # (default: "<spool_path>.d").
-    daemon_out: Optional[str] = None
+    daemon_out: str | None = None
     # None -> auto: spawn `python -m repro.profilerd` iff no explicit spool
     # path was given (an explicit spool means an external daemon attaches).
-    spawn_daemon: Optional[bool] = None
+    spawn_daemon: bool | None = None
     # Daemon backend: regional aggregator URL — the spawned daemon pushes
     # every sealed epoch there (`attach --push`); node name defaults to the
     # short hostname.  Ignored when an external daemon drains the spool
     # (configure --push on that daemon instead).
-    push_url: Optional[str] = None
-    push_node: Optional[str] = None
+    push_url: str | None = None
+    push_node: str | None = None
 
 
 @runtime_checkable
@@ -167,7 +168,7 @@ class SamplerBackend(Protocol):
     def depth_trace(self) -> list[tuple[float, int]]: ...
 
 
-def make_sampler(config: Optional[SamplerConfig] = None) -> SamplerBackend:
+def make_sampler(config: SamplerConfig | None = None) -> SamplerBackend:
     """Construct the backend selected by ``config.backend``.
 
     The ``REPRO_PROFILERD_SPOOL`` environment variable overrides the choice to
@@ -221,7 +222,7 @@ class RusagePoint:
 class StackSampler:
     """The ``thread`` backend: sampling helper thread inside the target."""
 
-    def __init__(self, config: Optional[SamplerConfig] = None):
+    def __init__(self, config: SamplerConfig | None = None):
         self.config = config or SamplerConfig()
         self.tree = CallTree()
         # Interned-ingest cache mirroring the daemon's (profilerd.ingest):
@@ -234,7 +235,7 @@ class StackSampler:
         self.n_samples = 0
         self._lock = threading.Lock()
         self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
         self._t0 = time.monotonic()
         self._psutil_proc = open_psutil_process() if self.config.record_rusage else None
 

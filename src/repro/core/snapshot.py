@@ -39,7 +39,7 @@ import os
 import struct
 import zlib
 from dataclasses import dataclass
-from typing import Iterator, Optional, Sequence
+from collections.abc import Iterator, Sequence
 
 from .calltree import CallNode, CallTree
 
@@ -194,7 +194,7 @@ def _payload_head(kind: int, meta: EpochMeta, tab: _StringTable, body: bytes) ->
     fresh = tab.drain_fresh()
     _wv(head, len(fresh))
     for s in fresh:
-        raw = s.encode("utf-8")
+        raw = s.encode()
         _wv(head, len(raw))
         head += raw
     return bytes(head) + body
@@ -260,7 +260,7 @@ def _encode_counts_payload(
     return _payload_head(K_COUNTS, meta, tab, bytes(body))
 
 
-def _apply_node(buf: bytes, off: int, strings: list[str], parent: Optional[CallNode], tree: CallTree) -> int:
+def _apply_node(buf: bytes, off: int, strings: list[str], parent: CallNode | None, tree: CallTree) -> int:
     nid, off = _rv(buf, off)
     if parent is None:
         node = tree.root  # the encoded root name is canonical; keep ours
@@ -289,7 +289,7 @@ def _apply_node(buf: bytes, off: int, strings: list[str], parent: Optional[CallN
 
 
 def _decode_payload(
-    payload: bytes, strings: list[str], paths: Optional[list[list[str]]] = None
+    payload: bytes, strings: list[str], paths: list[list[str]] | None = None
 ) -> tuple[EpochMeta, CallTree]:
     if paths is None:
         paths = []
@@ -389,7 +389,7 @@ def _parse_segment(data: bytes, path: str) -> tuple[list[tuple[EpochMeta, CallTr
 # -- single-snapshot files --------------------------------------------------
 
 
-def save_snapshot(tree: CallTree, path: str, meta: Optional[EpochMeta] = None) -> str:
+def save_snapshot(tree: CallTree, path: str, meta: EpochMeta | None = None) -> str:
     """Write one full snapshot (CI baselines, ``profilerd check`` refs).
 
     Defaults are deterministic (no wall clock) so a committed baseline file is
@@ -591,7 +591,7 @@ class TimelineReader:
                 seen_any = True
                 yield meta, window, cum
 
-    def last(self) -> Optional[tuple[EpochMeta, CallTree]]:
+    def last(self) -> tuple[EpochMeta, CallTree] | None:
         """Final ``(meta, cumulative)`` without replaying the whole ring.
 
         Every segment opens with a keyframe, so the final cumulative depends
@@ -611,7 +611,7 @@ class TimelineReader:
                 continue
             if records[0][0].kind != K_FULL:
                 break  # non-keyframe segment start: fall back to a full replay
-            cum: Optional[CallTree] = None
+            cum: CallTree | None = None
             for meta, tree in records:
                 if meta.kind == K_FULL:
                     cum = tree
@@ -646,7 +646,7 @@ class EpochSealer:
     cache) do a full-tree resync.
     """
 
-    def __init__(self, tree: CallTree, writer: Optional[TimelineWriter] = None):
+    def __init__(self, tree: CallTree, writer: TimelineWriter | None = None):
         self.tree = tree
         self.writer = writer
         self.epoch = 0
@@ -694,7 +694,7 @@ class EpochSealer:
         return CallTree(mirror_root)
 
     def _delta_full_walk(self) -> CallTree:
-        def rec(real: CallNode) -> Optional[CallNode]:
+        def rec(real: CallNode) -> CallNode | None:
             dm, ds = self._delta_vs_sealed(real)
             kids = {}
             for name, c in real.children.items():
@@ -716,10 +716,10 @@ class EpochSealer:
 
     def seal(
         self,
-        chains: Optional[Sequence[Sequence[CallNode]]] = None,
+        chains: Sequence[Sequence[CallNode]] | None = None,
         *,
         wall_time: float = 0.0,
-        progress: Optional[float] = None,
+        progress: float | None = None,
         full_walk: bool = False,
     ) -> tuple[EpochMeta, CallTree]:
         """Seal one epoch; returns ``(meta, window_delta_tree)``.
@@ -790,7 +790,7 @@ class CountSealer:
         entries,  # ingestor epoch entries: [chain, depth, stamp, count]
         *,
         wall_time: float = 0.0,
-        progress: Optional[float] = None,
+        progress: float | None = None,
         untracked: bool = False,
     ) -> EpochMeta:
         seen = self._seen

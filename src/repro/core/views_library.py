@@ -96,7 +96,7 @@ def phase_table(epochs, boundary: float = 0.25, metric: str = "samples", k: int 
         merged = CallTree()
         wall0 = epochs[start][0].wall_time
         wall1 = epochs[end][0].wall_time
-        for meta, window, _cum in epochs[start : end + 1]:
+        for _meta, window, _cum in epochs[start : end + 1]:
             merged.merge(window)  # merge only reads its argument
         top = sorted(name_shares(merged, metric).items(), key=lambda kv: -kv[1])[:k]
         summary = ", ".join(f"{name} {share:.0%}" for name, share in top) or "-"

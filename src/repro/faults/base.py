@@ -18,7 +18,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from importlib.util import find_spec
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -85,7 +85,7 @@ class FaultScenario:
     harness_side: bool = False
     # Daemon stall-timeout override (the hard-wedge scenario needs it shorter
     # than the fault window so TARGET_STALLED can fire inside it).
-    stall_timeout_s: Optional[float] = None
+    stall_timeout_s: float | None = None
     extra_child_env: dict = field(default_factory=dict)
 
     def available(self) -> tuple[bool, str]:

@@ -25,7 +25,6 @@ import sys
 import tempfile
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 from repro.core.detector import TrendRule
 from repro.profilerd.daemon import FAULT_MARKERS_FILENAME, spawn_attached_daemon
@@ -65,10 +64,10 @@ class RunResult:
     events: list[dict]
     status: dict
     t_start: float
-    t_inject: Optional[float]
-    t_clear: Optional[float]
+    t_inject: float | None
+    t_clear: float | None
     epoch_s: float
-    out_dir: Optional[str] = None  # only when keep_artifacts
+    out_dir: str | None = None  # only when keep_artifacts
     host_logs: dict[str, str] = field(default_factory=dict)
 
 
@@ -103,7 +102,7 @@ def _append_marker(out_dir: str, scenario: str, op: str) -> float:
 
 def run_scenario(
     scenario: FaultScenario,
-    cfg: Optional[HarnessConfig] = None,
+    cfg: HarnessConfig | None = None,
     *,
     control: bool = False,
 ) -> RunResult:

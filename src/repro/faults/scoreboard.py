@@ -28,7 +28,6 @@ precision must not be penalized for reporting it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 DETECTOR_COLUMNS = ("dominance", "trend_livelock", "trend_drift", "stall", "straggler")
 
@@ -57,7 +56,7 @@ UNSCORED_KINDS = {
 RECOVERY_KINDS = {"LIVELOCK_CLEARED", "TARGET_RESUMED"}
 
 
-def detector_of(event: dict) -> Optional[str]:
+def detector_of(event: dict) -> str | None:
     """Map one daemon event to its scored detector column (None = unscored)."""
     kind = event.get("kind", "")
     if kind in UNSCORED_KINDS or kind in RECOVERY_KINDS:
@@ -83,8 +82,8 @@ class CellScore:
     """One (scenario, detector) cell."""
 
     detected: bool = False
-    ttd_epochs: Optional[float] = None  # injection -> first in-window verdict
-    ttd_s: Optional[float] = None
+    ttd_epochs: float | None = None  # injection -> first in-window verdict
+    ttd_s: float | None = None
     true_positives: int = 0
     fault_run_fps: int = 0    # scored events outside the fault window
     control_fps: int = 0      # scored events on the clean control run
@@ -153,7 +152,7 @@ def build_bench(
     scenario_cells: dict[str, dict[str, CellScore]],
     *,
     config: dict,
-    skipped: Optional[dict[str, str]] = None,
+    skipped: dict[str, str] | None = None,
     ttd_floor_epochs: float = 10.0,
 ) -> dict:
     matrix = {

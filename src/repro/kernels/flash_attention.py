@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +38,7 @@ def _flash_kernel(
     m_ref, l_ref, acc_ref,  # scratch: (Bq,1), (Bq,1), (Bq,D) f32
     *,
     causal: bool,
-    window: Optional[int],
+    window: int | None,
     block_q: int,
     block_k: int,
     kv_len: int,
@@ -93,7 +92,7 @@ def flash_attention_bhsd(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,

@@ -9,7 +9,6 @@ Mosaic. The XLA reference path used by the dry-run lives in the model code.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ def flash_attention(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +14,7 @@ def attention_ref(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
 ) -> jax.Array:
     B, Hq, S, D = q.shape
     Hkv, T = k.shape[1], k.shape[2]

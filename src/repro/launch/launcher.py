@@ -45,7 +45,6 @@ import os
 import subprocess
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 
 @dataclass
@@ -60,29 +59,29 @@ class LaunchConfig:
     env: dict = field(default_factory=dict)
     # When set, one shared repro.profilerd daemon per node watches this dir;
     # per-attempt spools land here and the fleet tree merges at rendezvous.
-    profile_dir: Optional[str] = None
+    profile_dir: str | None = None
     profile_period_s: float = 0.2
     # Push every sealed epoch to this regional aggregator (an external
     # ``profilerd aggregate`` endpoint); rendezvous collects the merged
     # fleet tree from it instead of copying files between nodes.
-    aggregator_url: Optional[str] = None
+    aggregator_url: str | None = None
     # Run the regional aggregator in-process (under profile_dir/region.d)
     # when no external URL is given — single-supervisor deployments get the
     # push plane without operating a second service.
     aggregate: bool = False
     # Node name reported to the aggregator (defaults to the short hostname).
-    node_name: Optional[str] = None
+    node_name: str | None = None
     region: str = "region"
     # When set (with profile_dir), serve the rendezvous-merged fleet tree
     # over the profilerd HTTP query plane on this port (0 = ephemeral) once
     # the job ends; the server runs on a daemon thread (see Launcher.server).
-    serve_port: Optional[int] = None
+    serve_port: int | None = None
 
 
 @dataclass
 class LaunchReport:
     restarts: int = 0
-    exit_code: Optional[int] = None
+    exit_code: int | None = None
     events: list[str] = field(default_factory=list)
 
     def log(self, msg: str) -> None:
@@ -96,7 +95,7 @@ class Launcher:
         self.report = LaunchReport()
         self.server = None  # ProfileServer over the merged profile (serve_port)
         self.aggregator = None  # in-process regional Aggregator (aggregate=True)
-        self._agg_url: Optional[str] = None  # effective push endpoint
+        self._agg_url: str | None = None  # effective push endpoint
         self._daemons: list[subprocess.Popen] = []
         if cfg.profile_dir and not os.path.isabs(cfg.profile_dir):
             # The launcher, the daemon (cwd=workdir), and the child all touch
@@ -189,7 +188,7 @@ class Launcher:
             return
         self.report.log(f"in-process aggregator ({cfg.region}) at {self._agg_url}")
 
-    def _rendezvous_merge(self) -> Optional[str]:
+    def _rendezvous_merge(self) -> str | None:
         """Collect the fleet tree at job end.
 
         With an aggregator configured (external or in-process) the merged
@@ -221,7 +220,7 @@ class Launcher:
         self._serve_merged()
         return out
 
-    def _collect_from_aggregator(self) -> Optional[str]:
+    def _collect_from_aggregator(self) -> str | None:
         """The aggregator's continuously merged fleet tree -> merged_tree.json.
 
         In-process: seal + publish + read directly.  External: one GET of
@@ -244,7 +243,7 @@ class Launcher:
             url = self._agg_url.rstrip("/") + "/tree?fmt=json"
             try:
                 with urllib.request.urlopen(url, timeout=10.0) as resp:
-                    merged = CallTree.from_json(resp.read().decode("utf-8"))
+                    merged = CallTree.from_json(resp.read().decode())
             except (OSError, ValueError, KeyError) as e:
                 self.report.log(f"rendezvous: aggregator fetch failed ({e}); file-copy fallback")
                 return None
@@ -258,7 +257,7 @@ class Launcher:
         self.report.log(f"rendezvous: fleet tree from {src} -> {out}")
         return out
 
-    def _merge_host_trees(self) -> Optional[str]:
+    def _merge_host_trees(self) -> str | None:
         """Legacy file-copy rendezvous: merge ``*.d/tree.json`` dumps.
 
         The documented fallback for deployments without an aggregator — all
@@ -342,7 +341,7 @@ class Launcher:
             return
         self.report.log(f"rendezvous: merged profile served at {self.server.url}")
 
-    def _merge_timelines(self) -> Optional[str]:
+    def _merge_timelines(self) -> str | None:
         """Merge per-host timeline rings epoch-by-epoch at rendezvous.
 
         Epochs join on their sealed epoch *number*, not list position — ring

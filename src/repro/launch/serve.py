@@ -24,7 +24,6 @@ import json
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +85,7 @@ class BatchedServer:
         self.params = model.init(jax.random.key(seed))
         self.state = model.init_decode_state(batch, max_len)
         self.step_fn = jax.jit(make_serve_step(model), donate_argnums=(2,))
-        self.slots: list[Optional[Request]] = [None] * batch
+        self.slots: list[Request | None] = [None] * batch
         # per-slot progress: how many prompt tokens already consumed
         self.consumed = [0] * batch
         self.pos = 0

@@ -23,7 +23,6 @@ import json
 import os
 import time
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,17 +64,17 @@ class TrainJobConfig:
     # Daemon backend: explicit spool path means an external
     # `python -m repro.profilerd attach --spool ...` drains it; when None a
     # daemon subprocess is spawned automatically.
-    spool_path: Optional[str] = None
+    spool_path: str | None = None
     # Daemon backend: regional aggregator URL the spawned profilerd pushes
     # sealed epochs to (`profilerd aggregate`); node name defaults to hostname.
-    push_url: Optional[str] = None
-    push_node: Optional[str] = None
+    push_url: str | None = None
+    push_node: str | None = None
     sample_period_s: float = 0.2
     watchdog_threshold: float = 0.95
     # Extra detector rules appended to the defaults (e.g. a pattern-scoped
     # rule for a known livelock signature — far more robust than tuning the
     # generic threshold).
-    extra_rules: Optional[list] = None
+    extra_rules: list | None = None
     heartbeat_timeout_s: float = 600.0
     resume: bool = True
 

@@ -15,7 +15,6 @@ the full S×S score matrix — same math as the flash kernel, scan-based.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,14 +58,14 @@ def _project_qkv(params, x, cfg, positions):
     return q, k, v
 
 
-def _mask(q_idx, k_idx, window: Optional[int]):
+def _mask(q_idx, k_idx, window: int | None):
     m = k_idx[None, :] <= q_idx[:, None]
     if window is not None:
         m &= (q_idx[:, None] - k_idx[None, :]) < window
     return m
 
 
-def _attend_full(q, k, v, cfg, *, q_offset: int = 0, window: Optional[int] = None):
+def _attend_full(q, k, v, cfg, *, q_offset: int = 0, window: int | None = None):
     """q: (B,S,Hq,D); k,v: (B,T,Hkv,D). Materializes (B,Hkv,G,S,T)."""
     B, S, Hq, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
@@ -83,7 +82,7 @@ def _attend_full(q, k, v, cfg, *, q_offset: int = 0, window: Optional[int] = Non
     return o.reshape(B, S, Hq, D)
 
 
-def _attend_chunked(q, k, v, cfg, *, window: Optional[int] = None):
+def _attend_chunked(q, k, v, cfg, *, window: int | None = None):
     """Online-softmax over query chunks: memory O(chunk * T), same math as
     the flash kernel (the Pallas kernel additionally tiles T into VMEM).
 
@@ -145,7 +144,7 @@ def _attend_chunked(q, k, v, cfg, *, window: Optional[int] = None):
     return o.reshape(B, S, Hq, D)
 
 
-def attention(params, x, cfg, positions, *, window: Optional[int] = None, scope: str = "attention"):
+def attention(params, x, cfg, positions, *, window: int | None = None, scope: str = "attention"):
     """Training/prefill self-attention. x: (B,S,D) -> (B,S,D)."""
     with jax.named_scope(scope):
         q, k, v = _project_qkv(params, x, cfg, positions)
@@ -189,7 +188,7 @@ def abstract_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict
     }
 
 
-def decode_attention(params, x, cache: dict, pos, cfg, *, window: Optional[int] = None, scope: str = "attention"):
+def decode_attention(params, x, cache: dict, pos, cfg, *, window: int | None = None, scope: str = "attention"):
     """One-token decode. x: (B,1,D); pos: () int32 current position.
 
     Returns (y, new_cache). The cache ring-buffers over the window for

@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +32,10 @@ class ArraySpec:
     """Declarative parameter: shape + logical axes + initializer."""
 
     shape: tuple[int, ...]
-    logical: tuple[Optional[str], ...]
+    logical: tuple[str | None, ...]
     dtype: Any = jnp.float32
     init: str = "normal"  # normal | zeros | ones | embed
-    scale: Optional[float] = None  # overrides fan-in scaling
+    scale: float | None = None  # overrides fan-in scaling
 
     def __post_init__(self):
         assert len(self.shape) == len(self.logical), (self.shape, self.logical)
@@ -63,7 +64,7 @@ def init_params(spec_tree, key: jax.Array):
     """Materialize concrete parameters from a spec tree (smoke tests/training)."""
     leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
     keys = jax.random.split(key, len(leaves))
-    vals = [leaf.initializer(k) for leaf, k in zip(leaves, keys)]
+    vals = [leaf.initializer(k) for leaf, k in zip(leaves, keys, strict=True)]
     return jax.tree.unflatten(treedef, vals)
 
 
@@ -118,12 +119,12 @@ def dense(params, x, spec: str, *, scope: str = "dense"):
 
 def dense_spec(
     shape: tuple[int, ...],
-    logical: tuple[Optional[str], ...],
+    logical: tuple[str | None, ...],
     *,
     bias: bool = False,
-    bias_axes: Optional[tuple] = None,
+    bias_axes: tuple | None = None,
     dtype=jnp.float32,
-    scale: Optional[float] = None,
+    scale: float | None = None,
 ) -> dict:
     out = {"w": ArraySpec(shape, logical, dtype, "normal", scale)}
     if bias:

@@ -8,7 +8,6 @@ arithmetic is fp32 regardless of parameter dtype.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Union
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +44,7 @@ def adamw_update(
     opt_state: dict,
     params,
     *,
-    lr: Union[float, jax.Array],
+    lr: float | jax.Array,
     cfg: AdamWConfig = AdamWConfig(),
 ):
     """-> (new_params, new_opt_state, metrics). Pure; jit/scan-friendly."""
@@ -70,7 +69,7 @@ def adamw_update(
         flat_g = treedef.flatten_up_to(grads)
         flat_m = treedef.flatten_up_to(opt_state["m"])
         flat_v = treedef.flatten_up_to(opt_state["v"])
-        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
         new_p = treedef.unflatten([o[0] for o in out])
         new_m = treedef.unflatten([o[1] for o in out])
         new_v = treedef.unflatten([o[2] for o in out])

@@ -59,7 +59,13 @@ from repro.core.detector import Rule, TrendRule
 from repro.core.planes import PLANES, PlaneError, default_metric, select_plane
 
 from .daemon import DaemonConfig, ProfilerDaemon, rule_from_spec
-from .profiles import TIMELINE_DIRNAME, ProfileLoadError, load_device_plane, load_profile
+from .profiles import (
+    TIMELINE_DIRNAME,
+    ProfileLoadError,
+    load_device_plane,
+    load_profile,
+    load_static_plane,
+)
 from .spool import SpoolError
 
 EXIT_REGRESSION = 2
@@ -75,6 +81,10 @@ def _resolve_plane(tree, profile_path: str, plane: str):
     or :class:`ProfileLoadError` for a present-but-garbage artifact."""
     if plane == "host":
         return tree
+    if plane == "static":
+        return select_plane(
+            tree, None, plane, profile=profile_path, static=load_static_plane(profile_path)
+        )
     return select_plane(tree, load_device_plane(profile_path), plane, profile=profile_path)
 
 

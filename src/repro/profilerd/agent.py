@@ -24,7 +24,6 @@ import sys
 import tempfile
 import threading
 import time
-from typing import Optional
 
 from repro.core.calltree import CallNode, CallTree
 from repro.core.sampler import SamplerConfig, is_profiler_thread, open_psutil_process
@@ -61,7 +60,7 @@ class Agent:
         # helper thread's own tick, so ticks are serialized.
         self._tick_lock = threading.Lock()
         self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
         self._t0 = time.monotonic()
         self.n_ticks = 0
         self.n_stacks = 0  # stacks offered to the spool (dropped ones included)
@@ -155,7 +154,7 @@ class DaemonBackend:
     tree that was built in another process.
     """
 
-    def __init__(self, config: Optional[SamplerConfig] = None):
+    def __init__(self, config: SamplerConfig | None = None):
         self.config = config or SamplerConfig(backend="daemon")
         explicit_spool = self.config.spool_path is not None
         if explicit_spool:
@@ -166,9 +165,9 @@ class DaemonBackend:
         self.out_dir = self.config.daemon_out or f"{self.spool_path}.d"
         spawn = self.config.spawn_daemon
         self.spawn_daemon = (not explicit_spool) if spawn is None else spawn
-        self.agent: Optional[Agent] = None
-        self._proc: Optional[subprocess.Popen] = None
-        self._stopped_tree: Optional[CallTree] = None
+        self.agent: Agent | None = None
+        self._proc: subprocess.Popen | None = None
+        self._stopped_tree: CallTree | None = None
 
     # -- published-artifact readers -----------------------------------------
 

@@ -47,7 +47,7 @@ import signal
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Mapping, Optional
+from collections.abc import Mapping
 
 from repro.core.calltree import CallTree
 from repro.core.snapshot import (
@@ -110,7 +110,7 @@ class AggregatorConfig:
     default_interval_s: float = 5.0
     max_body_bytes: int = 8 << 20
     hot_k: int = 10
-    max_seconds: Optional[float] = None
+    max_seconds: float | None = None
     fsync: bool = False
 
     def timeline_dir(self) -> str:
@@ -123,10 +123,10 @@ class AggregatorConfig:
 @dataclass
 class _NodeState:
     name: str
-    boot: Optional[str] = None
+    boot: str | None = None
     # `base` holds dead incarnations' final cumulatives; `cum` is the live
     # incarnation.  The node's contribution to the fleet is base + cum.
-    base: Optional[CallTree] = None
+    base: CallTree | None = None
     cum: CallTree = field(default_factory=CallTree)
     # Dedup state: every epoch <= floor is applied; `applied` holds the
     # sparse out-of-order epochs above it.
@@ -140,7 +140,7 @@ class _NodeState:
     stalled: bool = False
     last_push_mono: float = 0.0
     last_push_wall: float = 0.0
-    writer: Optional[TimelineWriter] = None
+    writer: TimelineWriter | None = None
     epochs_applied: int = 0
     duplicates: int = 0
     stale: int = 0
@@ -175,7 +175,7 @@ class Aggregator:
         self.nodes: dict[str, _NodeState] = {}
         self.events: list[dict] = []
         self._fleet_tree = CallTree()
-        self._fleet_prev: Optional[CallTree] = None
+        self._fleet_prev: CallTree | None = None
         self._fleet_epoch = 0
         self._dirty = False
         self._stop_requested = False
@@ -322,7 +322,7 @@ class Aggregator:
     def _apply(
         self,
         name: str,
-        boot: Optional[str],
+        boot: str | None,
         meta: EpochMeta,
         tree: CallTree,
         n_bytes: int,
@@ -622,7 +622,7 @@ class Aggregator:
 
     # -- serving + main loop -------------------------------------------------
 
-    def enable_serving(self, port: Optional[int] = None, host: Optional[str] = None):
+    def enable_serving(self, port: int | None = None, host: str | None = None):
         from .server import ProfileServer
 
         if self.server is not None:
@@ -702,7 +702,7 @@ class AggregatorSource:
     def status(self) -> dict:
         return self.agg.status()
 
-    def tree(self, target: Optional[str] = None) -> CallTree:
+    def tree(self, target: str | None = None) -> CallTree:
         if target is None:
             return self.agg.fleet_tree()
         with self.agg._lock:
@@ -726,10 +726,10 @@ class AggregatorSource:
         h = self.agg.hierarchy()
         return {"region": h["region"], "targets": self.targets(), "nodes": h["nodes"]}
 
-    def device_tree(self, target: Optional[str] = None):
+    def device_tree(self, target: str | None = None):
         return None
 
-    def timeline_dir(self, target: Optional[str] = None) -> Optional[str]:
+    def timeline_dir(self, target: str | None = None) -> str | None:
         if target is None:
             return self.agg.cfg.timeline_dir()
         return os.path.join(self.agg._node_dir(target), TIMELINE_DIRNAME)

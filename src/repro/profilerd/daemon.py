@@ -34,14 +34,19 @@ import os
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 from repro.core.calltree import CallTree
 from repro.core.detector import Rule, TrendRule
 from repro.core.snapshot import EpochMeta, TimelineWriter
 
 from .pipeline import merge_ingest_stats
-from .profiles import DEVICE_TREE_FILENAME, TARGETS_DIRNAME, TIMELINE_DIRNAME
+from .profiles import (
+    DEVICE_TREE_FILENAME,
+    STATIC_TREE_FILENAME,
+    TARGETS_DIRNAME,
+    TIMELINE_DIRNAME,
+)
 from .sources import RESUMED, STALLED, SpoolSet, SpoolSource, _pid_alive, source_name_for
 from .spool import SpoolError, SpoolReader, _ShortHeader
 
@@ -102,25 +107,25 @@ def rule_from_spec(spec: str) -> Rule:
 
 
 def spawn_attached_daemon(
-    spool_path: Optional[str] = None,
-    out_dir: Optional[str] = None,
+    spool_path: str | None = None,
+    out_dir: str | None = None,
     *,
     targets: Sequence[str] = (),
-    watch_dir: Optional[str] = None,
+    watch_dir: str | None = None,
     interval_s: float = 1.0,
     collapse_origins: Sequence[str] = (),
-    stall_timeout_s: Optional[float] = None,
-    epoch_s: Optional[float] = None,
-    serve_port: Optional[int] = None,
-    exit_with_pid: Optional[int] = None,
-    device_tree: Optional[str] = None,
+    stall_timeout_s: float | None = None,
+    epoch_s: float | None = None,
+    serve_port: int | None = None,
+    exit_with_pid: int | None = None,
+    device_tree: str | None = None,
     rules: Sequence[Rule] = (),
-    trend_rule: Optional[TrendRule] = None,
-    threshold: Optional[float] = None,
-    consecutive: Optional[int] = None,
-    cwd: Optional[str] = None,
-    push: Optional[str] = None,
-    push_node: Optional[str] = None,
+    trend_rule: TrendRule | None = None,
+    threshold: float | None = None,
+    consecutive: int | None = None,
+    cwd: str | None = None,
+    push: str | None = None,
+    push_node: str | None = None,
 ):
     """Spawn ``python -m repro.profilerd attach`` as a detached subprocess.
 
@@ -186,15 +191,15 @@ class DaemonConfig:
     # One of spool_path / spool_paths / watch_dir must be set.  A single
     # spool_path with neither of the others runs in "solo" mode — exactly the
     # classic one-target layout (flat out dir, CountSealer ring).
-    spool_path: Optional[str] = None
+    spool_path: str | None = None
     spool_paths: tuple[str, ...] = ()  # explicit multi-target attach
-    watch_dir: Optional[str] = None  # attach spools created after daemon start
+    watch_dir: str | None = None  # attach spools created after daemon start
     watch_glob: str = "*.spool"
-    out_dir: Optional[str] = None  # default: "<spool_path>.d" / "<watch>/fleet.d"
+    out_dir: str | None = None  # default: "<spool_path>.d" / "<watch>/fleet.d"
     publish_interval_s: float = 1.0
     drain_interval_s: float = 0.05
     collapse_origins: tuple[str, ...] = ()
-    rules: Optional[Sequence[Rule]] = None
+    rules: Sequence[Rule] | None = None
     # No fresh samples for this long while the target is alive => stalled.
     stall_timeout_s: float = 5.0
     attach_timeout_s: float = 30.0
@@ -209,7 +214,7 @@ class DaemonConfig:
     straggler_threshold: float = 0.5
     straggler_consecutive: int = 2
     straggler_min_window: float = 8.0
-    max_seconds: Optional[float] = None  # bound the run (tests/benchmarks)
+    max_seconds: float | None = None  # bound the run (tests/benchmarks)
     hot_k: int = 10
     timeline_cap: int = 2048
     window_ring: int = 32
@@ -219,18 +224,18 @@ class DaemonConfig:
     epoch_s: float = 5.0
     epochs_per_segment: int = 16
     max_segments: int = 64
-    trend_rule: Optional[TrendRule] = None
+    trend_rule: TrendRule | None = None
     # Live HTTP query plane (repro.profilerd.server): serve /status /targets
     # /tree /timeline /diff while attached.  None disables; 0 binds an
     # ephemeral port.  Handlers read the published snapshot under a lock —
     # the ingest path is never touched by a request.
-    serve_port: Optional[int] = None
+    serve_port: int | None = None
     serve_host: str = "127.0.0.1"
     # Stop (clean final drain+publish) when this pid dies.  A --watch daemon
     # has no BYE-based exit, so a supervisor that crashes before sending
     # SIGTERM would otherwise leak it forever; the launcher passes its own
     # pid here.
-    exit_with_pid: Optional[int] = None
+    exit_with_pid: int | None = None
     # Device-plane artifact (core/hlo_tree.save_device_tree) for the fleet's
     # compiled program.  Explicit path, or None to lazily discover a
     # ``device_tree.json`` dropped into the out dir / a target dir — targets
@@ -238,12 +243,12 @@ class DaemonConfig:
     # When present the fleet timeline seals roofline-annotated epochs (solo
     # mode switches from the CountSealer fast path to the generic fleet ring
     # to carry them) and the live server gains plane=device|merged.
-    device_tree: Optional[str] = None
+    device_tree: str | None = None
     # Fleet push plane: POST each sealed epoch (snapshot-codec framing, see
     # repro.profilerd.push) to a regional aggregator.  None disables.  Push
     # rides the epoch cadence, so it needs epoch_s > 0.
-    push_url: Optional[str] = None
-    push_node: Optional[str] = None  # default: the hostname
+    push_url: str | None = None
+    push_node: str | None = None  # default: the hostname
     push_keyframe_every: int = 16
     push_max_spill_bytes: int = 16 << 20
     push_timeout_s: float = 5.0
@@ -298,22 +303,27 @@ class ProfilerDaemon:
         )
         # Device plane: loaded from cfg.device_tree or discovered beside the
         # out dir once a target drops its artifact (see _refresh_device_tree).
-        self._device_tree: Optional[CallTree] = None
+        self._device_tree: CallTree | None = None
         self._device_tree_mtime = -1.0
-        self._device_tree_error: Optional[str] = None
+        self._device_tree_error: str | None = None
+        # Static call-graph plane: discovered beside the out dir, same
+        # lazy-artifact lifecycle as the device plane (_refresh_static_tree).
+        self._static_tree: CallTree | None = None
+        self._static_tree_mtime = -1.0
+        self._static_tree_error: str | None = None
         # Fleet timeline ring (multi mode): per-target rings are sealed by
         # each source's CountSealer; the fleet ring is merged at seal time.
         # Solo mode with an explicit device tree also takes this path — the
         # CountSealer fast lane is samples-only and cannot carry roofline
         # annotations, so annotated epochs go through the generic codec.
-        self.fleet_writer: Optional[TimelineWriter] = None
+        self.fleet_writer: TimelineWriter | None = None
         if cfg.epoch_s > 0 and (not self.solo or cfg.device_tree):
             self.fleet_writer = TimelineWriter(
                 cfg.resolved_timeline_dir(),
                 epochs_per_segment=cfg.epochs_per_segment,
                 max_segments=cfg.max_segments,
             )
-        self._fleet_prev: Optional[CallTree] = None
+        self._fleet_prev: CallTree | None = None
         self._fleet_epoch = 0
         self._fleet_tree = CallTree()  # latest published merge (multi mode)
         self._fleet_n = 0  # source count at the last fleet merge
@@ -331,7 +341,7 @@ class ProfilerDaemon:
         self.server = None
         self._stop_requested = False
         self._attach_errors: dict[str, str] = {}
-        self._last_attach_error: Optional[SpoolError] = None
+        self._last_attach_error: SpoolError | None = None
         # Fault-window markers: a harness (repro.faults) appends inject/clear
         # lines to <out>/fault_markers.jsonl; the daemon tails the file and
         # threads each marker into the event log stamped with the current
@@ -369,7 +379,7 @@ class ProfilerDaemon:
 
     # -- compatibility surface (classic single-target attributes) ------------
 
-    def _solo_source(self) -> Optional[SpoolSource]:
+    def _solo_source(self) -> SpoolSource | None:
         if len(self.spools.sources) == 1:
             return next(iter(self.spools.sources.values()))
         return None
@@ -458,7 +468,7 @@ class ProfilerDaemon:
     def _target_dir(self, name: str) -> str:
         return os.path.join(self.out_dir, TARGETS_DIRNAME, name)
 
-    def _make_source(self, name: str, path: str, reader: Optional[SpoolReader] = None):
+    def _make_source(self, name: str, path: str, reader: SpoolReader | None = None):
         try:
             tdir = None
             if self.cfg.epoch_s > 0:
@@ -648,6 +658,45 @@ class ProfilerDaemon:
              "call_sites": tree.node_count(), "wall_time": time.time()}
         )
 
+    def _refresh_static_tree(self) -> None:
+        """Pick up the static call-graph artifact, possibly dropped mid-run.
+
+        ``python -m repro.analysis extract --out <out_dir>/static_tree.json``
+        (an operator, or CI) drops the artifact at any point; one
+        existence/mtime probe per publish window hands it to the live query
+        plane so ``/tree?plane=static`` works without a daemon restart.
+        """
+        path = os.path.join(self.out_dir, STATIC_TREE_FILENAME)
+        if not os.path.exists(path):
+            return
+        try:
+            mtime = os.path.getmtime(path)
+        except OSError:
+            return
+        if self._static_tree is not None and mtime <= self._static_tree_mtime:
+            return
+        from repro.analysis.static_tree import load_static_tree
+
+        try:
+            tree = load_static_tree(path)
+        except (OSError, ValueError, KeyError) as e:
+            if self._static_tree_error != str(e):  # log each distinct failure once
+                self._static_tree_error = str(e)
+                self._record_event(
+                    {"kind": "STATIC_TREE_UNREADABLE", "path": path,
+                     "error": str(e), "wall_time": time.time()}
+                )
+            return
+        self._static_tree = tree
+        self._static_tree_mtime = mtime
+        self._static_tree_error = None
+        if self.shared is not None:
+            self.shared.set_static_tree(tree)
+        self._record_event(
+            {"kind": "STATIC_TREE_LOADED", "path": path,
+             "call_sites": tree.node_count(), "wall_time": time.time()}
+        )
+
     def seal_epoch(self) -> None:
         """Seal the current window into the timeline ring(s) + trend rules.
 
@@ -661,6 +710,7 @@ class ProfilerDaemon:
         # A short run can seal its only epoch before the first publish window
         # ever fires — the artifact must still be picked up here.
         self._refresh_device_tree()
+        self._refresh_static_tree()
         wall = time.time()
         for s in self.sources:
             try:
@@ -687,7 +737,7 @@ class ProfilerDaemon:
                         "wall_time": v.wall_time,
                     }
                 )
-        fleet: Optional[CallTree] = None
+        fleet: CallTree | None = None
         if (self.fleet_writer is not None or self._push is not None) and self.sources:
             solo_src = self._solo_source()
             if self.solo and solo_src is not None and self.fleet_writer is None:
@@ -839,7 +889,7 @@ class ProfilerDaemon:
                 }
             )
 
-    def enable_serving(self, port: Optional[int] = None, host: Optional[str] = None):
+    def enable_serving(self, port: int | None = None, host: str | None = None):
         """Start the HTTP query plane over this daemon's published state.
 
         Returns the started :class:`~repro.profilerd.server.ProfileServer`.
@@ -855,6 +905,8 @@ class ProfilerDaemon:
         self.shared = SharedProfileState()
         if self._device_tree is not None:
             self.shared.set_device_tree(self._device_tree)
+        if self._static_tree is not None:
+            self.shared.set_static_tree(self._static_tree)
         tdir = self.cfg.resolved_timeline_dir() if self.cfg.epoch_s > 0 else None
         label = f"pid={self.target_pid or '?'}" if self.solo else f"fleet:{self.out_dir}"
         source = LiveSource(
@@ -874,7 +926,7 @@ class ProfilerDaemon:
         )
         return self.server
 
-    def _target_timeline_dir(self, name: str) -> Optional[str]:
+    def _target_timeline_dir(self, name: str) -> str | None:
         if self.cfg.epoch_s <= 0 or name not in self.spools.sources:
             return None
         return os.path.join(self._target_dir(name), TIMELINE_DIRNAME)
@@ -882,13 +934,14 @@ class ProfilerDaemon:
     def publish(self) -> None:
         """One analysis window: detector verdicts + status/tree artifacts."""
         self._refresh_device_tree()
+        self._refresh_static_tree()
         changed = []
         for s in self.sources:
             snap = s.publish_window()
             if snap is not None:
                 changed.append((s, snap))
         solo_src = self._solo_source()
-        fleet_snap: Optional[CallTree] = None
+        fleet_snap: CallTree | None = None
         if solo_src is not None:
             # The lone source's snapshot is the fleet snapshot — no merge.
             fleet_snap = changed[0][1] if changed else None
@@ -1000,6 +1053,7 @@ class ProfilerDaemon:
                 for row in self.spools.attach_failure_rows()
             ],
             "device_plane": self._device_tree is not None,
+            "static_plane": self._static_tree is not None,
             "node": self._push.node if self._push is not None else None,
             "push": self._push.stats() if self._push is not None else None,
             "targets": {s.name: s.status_row() for s in srcs},

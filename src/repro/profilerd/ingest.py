@@ -41,7 +41,7 @@ write a keyframe instead of a counts record.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 from repro.core.calltree import CallTree
 
@@ -61,8 +61,8 @@ class TreeIngestor:
 
     def __init__(
         self,
-        tree: Optional[CallTree] = None,
-        resolver: Optional[SymbolResolver] = None,
+        tree: CallTree | None = None,
+        resolver: SymbolResolver | None = None,
         collapse_origins: Sequence[str] = (),
         max_paths: int = DEFAULT_MAX_PATHS,
     ):

@@ -53,7 +53,7 @@ degraded_stackdefs  STACKDEFs dropped for lack of delta context (re-attach)
 from __future__ import annotations
 
 from collections import deque
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 from repro.core.snapshot import CountSealer, EpochMeta, TimelineWriter
 
@@ -87,14 +87,14 @@ class IngestPipeline:
         self,
         reader=None,
         *,
-        decoder: Optional[Decoder] = None,
-        ingestor: Optional[TreeIngestor] = None,
-        resolver: Optional[SymbolResolver] = None,
+        decoder: Decoder | None = None,
+        ingestor: TreeIngestor | None = None,
+        resolver: SymbolResolver | None = None,
         collapse_origins: Sequence[str] = (),
-        timeline_writer: Optional[TimelineWriter] = None,
+        timeline_writer: TimelineWriter | None = None,
         metric: str = "samples",
-        vectorized: Optional[bool] = None,
-        depth_timeline: Optional[deque] = None,
+        vectorized: bool | None = None,
+        depth_timeline: deque | None = None,
     ):
         self.reader = reader
         self.decoder = decoder if decoder is not None else Decoder()
@@ -105,7 +105,7 @@ class IngestPipeline:
         )
         self.tree = self.ingestor.tree
         self.resolver = self.ingestor.resolver
-        self.sealer: Optional[CountSealer] = None
+        self.sealer: CountSealer | None = None
         if timeline_writer is not None:
             self.sealer = CountSealer(self.tree, timeline_writer, metric)
         # Batch vs per-sample is decided once, here: auto-detect on None,
@@ -143,7 +143,7 @@ class IngestPipeline:
                     if cap is not None and len(ts) > cap:
                         ts = ts[-cap:]
                         depths = depths[-cap:]
-                    tl.extend(zip(ts.tolist(), depths.tolist()))
+                    tl.extend(zip(ts.tolist(), depths.tolist(), strict=True))
                 elif type(item) is RawSample:
                     tl.append((item.t, ing.ingest(item)))
                     self.samples += 1
@@ -168,7 +168,7 @@ class IngestPipeline:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def reset_stream(self, decoder: Optional[Decoder] = None) -> None:
+    def reset_stream(self, decoder: Decoder | None = None) -> None:
         """Writer re-attach: the restarted target re-assigns ids from 0, so
         the decoder and every ``stack_id``-keyed cache must die together.
         Loss counters fold into the pipeline so totals survive."""
@@ -178,7 +178,7 @@ class IngestPipeline:
         self.resolver.reset_interned()
         self.ingestor.reset_chain_cache()
 
-    def seal_epoch(self, wall_time: float = 0.0) -> tuple[Optional[EpochMeta], list]:
+    def seal_epoch(self, wall_time: float = 0.0) -> tuple[EpochMeta | None, list]:
         """Drain the epoch dirty list into the ring; returns
         ``(meta, entries)`` (entries for trend windows etc.), or
         ``(None, [])`` when no sealer is configured."""

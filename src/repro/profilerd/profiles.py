@@ -18,6 +18,7 @@ import os
 TIMELINE_DIRNAME = "timeline"
 TARGETS_DIRNAME = "targets"  # multi-target daemon: per-target artifact dirs
 DEVICE_TREE_FILENAME = "device_tree.json"  # device-plane artifact beside a profile
+STATIC_TREE_FILENAME = "static_tree.json"  # static call-graph artifact beside a profile
 REGION_FILENAME = "region.json"  # aggregator out dir: region -> node -> target map
 
 
@@ -157,6 +158,40 @@ def load_device_plane(path: str, target: str | None = None):
         return load_device_tree(p)
     except (OSError, ValueError, KeyError) as e:
         raise ProfileLoadError(f"{p}: unreadable device tree: {e}") from None
+
+
+def static_tree_path(path: str, target: str | None = None):
+    """Resolve the ``static_tree.json`` artifact beside a profile, or None.
+
+    Same resolution as :func:`device_tree_path`: a profile dir holds it
+    directly, a per-target dir may hold a target-specific one falling back
+    to the fleet-level artifact (all targets run the same source tree), and
+    a ``tree.json``/``.snap`` file has it as a sibling.
+    """
+    if os.path.isdir(path):
+        if target:
+            p = os.path.join(path, TARGETS_DIRNAME, target, STATIC_TREE_FILENAME)
+            if os.path.exists(p):
+                return p
+        p = os.path.join(path, STATIC_TREE_FILENAME)
+        return p if os.path.exists(p) else None
+    p = os.path.join(os.path.dirname(path) or ".", STATIC_TREE_FILENAME)
+    return p if os.path.exists(p) else None
+
+
+def load_static_plane(path: str, target: str | None = None):
+    """The static call-graph CallTree beside a profile: None when absent,
+    raises :class:`ProfileLoadError` when present but unreadable (never a
+    vacuous empty tree — same contract as the device plane)."""
+    from repro.analysis.static_tree import load_static_tree
+
+    p = static_tree_path(path, target)
+    if p is None:
+        return None
+    try:
+        return load_static_tree(p)
+    except (OSError, ValueError, KeyError) as e:
+        raise ProfileLoadError(f"{p}: unreadable static tree: {e}") from None
 
 
 def load_region(path: str):

@@ -31,7 +31,7 @@ from __future__ import annotations
 import random
 import time
 import uuid
-from typing import Callable, Mapping, Optional, Sequence
+from collections.abc import Callable, Mapping, Sequence
 
 from repro.core.calltree import CallTree
 from repro.core.snapshot import (
@@ -141,8 +141,8 @@ class PushClient:
         timeout_s: float = 5.0,
         retry_base_s: float = 0.5,
         retry_cap_s: float = 30.0,
-        on_event: Optional[Callable[[dict], None]] = None,
-        post: Optional[Callable[..., int]] = None,
+        on_event: Callable[[dict], None] | None = None,
+        post: Callable[..., int] | None = None,
     ):
         if keyframe_every < 1:
             raise ValueError("keyframe_every must be >= 1")
@@ -158,14 +158,14 @@ class PushClient:
         self.on_event = on_event
         self._post = post or _default_post
         self.epoch = 0
-        self._prev: Optional[CallTree] = None
+        self._prev: CallTree | None = None
         self._need_keyframe = True
         # Spill queue: (epoch, headers, body), oldest first.  Bodies are
         # already encoded — an outage costs memory bounded by
         # max_spill_bytes, never re-encoding work.
         self._queue: list[tuple[int, dict, bytes]] = []
         self._queue_bytes = 0
-        self._failing_since: Optional[float] = None
+        self._failing_since: float | None = None
         self._attempts = 0
         self._next_attempt = 0.0
         self._last_error = ""

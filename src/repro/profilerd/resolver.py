@@ -22,7 +22,7 @@ Two cache tiers:
 from __future__ import annotations
 
 import sys
-from typing import Iterable, Sequence
+from collections.abc import Iterable, Sequence
 
 from repro.core.sampler import classify_frame, collapse_stack
 

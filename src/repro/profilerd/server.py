@@ -38,7 +38,6 @@ import os
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional
 from urllib.parse import parse_qs, urlsplit
 
 from repro.core.calltree import CallTree
@@ -66,7 +65,9 @@ from .profiles import (
     load_device_plane,
     load_profile,
     load_region,
+    load_static_plane,
     profile_mtime,
+    static_tree_path,
     target_profile_dir,
     timeline_dir_of,
 )
@@ -90,15 +91,16 @@ class SharedProfileState:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._status: dict = {}
-        self._tree: Optional[CallTree] = None
+        self._tree: CallTree | None = None
         self._targets: dict[str, CallTree] = {}
-        self._device_tree: Optional[CallTree] = None
+        self._device_tree: CallTree | None = None
+        self._static_tree: CallTree | None = None
 
     def update(
         self,
         status: dict,
-        tree: Optional[CallTree] = None,
-        targets: Optional[dict] = None,
+        tree: CallTree | None = None,
+        targets: dict | None = None,
     ) -> None:
         with self._lock:
             self._status = status
@@ -107,7 +109,7 @@ class SharedProfileState:
             if targets is not None:
                 self._targets = dict(targets)
 
-    def set_device_tree(self, tree: Optional[CallTree]) -> None:
+    def set_device_tree(self, tree: CallTree | None) -> None:
         """The daemon's device-plane artifact (one per fleet: co-located
         targets run the same compiled program).  Set once at startup; the
         tree is never mutated afterwards, so readers share it lock-free
@@ -115,15 +117,25 @@ class SharedProfileState:
         with self._lock:
             self._device_tree = tree
 
-    def device_tree(self) -> Optional[CallTree]:
+    def device_tree(self) -> CallTree | None:
         with self._lock:
             return self._device_tree
+
+    def set_static_tree(self, tree: CallTree | None) -> None:
+        """The static call-graph artifact (one per fleet: every target runs
+        the same source tree).  Same swap discipline as the device plane."""
+        with self._lock:
+            self._static_tree = tree
+
+    def static_tree(self) -> CallTree | None:
+        with self._lock:
+            return self._static_tree
 
     def snapshot(self) -> tuple[dict, CallTree]:
         with self._lock:
             return self._status, (self._tree if self._tree is not None else CallTree())
 
-    def target_tree(self, name: str) -> Optional[CallTree]:
+    def target_tree(self, name: str) -> CallTree | None:
         with self._lock:
             return self._targets.get(name)
 
@@ -138,7 +150,7 @@ class LiveSource:
     def __init__(
         self,
         shared: SharedProfileState,
-        timeline_dir: Optional[str] = None,
+        timeline_dir: str | None = None,
         label: str = "live",
         target_timeline_dir_fn=None,
     ):
@@ -151,7 +163,7 @@ class LiveSource:
         status, _ = self.shared.snapshot()
         return status or {"live": True, "note": "daemon has not published yet"}
 
-    def tree(self, target: Optional[str] = None) -> CallTree:
+    def tree(self, target: str | None = None) -> CallTree:
         if target is None:
             return self.shared.snapshot()[1]
         t = self.shared.target_tree(target)
@@ -199,12 +211,16 @@ class LiveSource:
             "nodes": [{"name": node, "targets": rows}],
         }
 
-    def device_tree(self, target: Optional[str] = None) -> Optional[CallTree]:
+    def device_tree(self, target: str | None = None) -> CallTree | None:
         # One device artifact per fleet: every co-located target runs the
         # same compiled program, so the per-target plane is the fleet plane.
         return self.shared.device_tree()
 
-    def timeline_dir(self, target: Optional[str] = None) -> Optional[str]:
+    def static_tree(self, target: str | None = None) -> CallTree | None:
+        # One static artifact per fleet: every target runs the same source.
+        return self.shared.static_tree()
+
+    def timeline_dir(self, target: str | None = None) -> str | None:
         if target is None:
             return self._timeline_dir
         if self._target_timeline_dir_fn is None:
@@ -220,12 +236,13 @@ class OfflineSource:
     behind its own mtime cache.
     """
 
-    def __init__(self, profile_path: str, label: Optional[str] = None):
+    def __init__(self, profile_path: str, label: str | None = None):
         self.path = profile_path
         self.label = label or profile_path
-        self._cached: Optional[CallTree] = None
+        self._cached: CallTree | None = None
         self._cached_mtime = -1.0
         self._device_cache: dict[str, tuple[float, CallTree]] = {}
+        self._static_cache: dict[str, tuple[float, CallTree]] = {}
         self._target_sources: dict[str, "OfflineSource"] = {}
         self._lock = threading.Lock()
 
@@ -244,7 +261,7 @@ class OfflineSource:
                 sub = self._target_sources.setdefault(target, sub)
         return sub
 
-    def tree(self, target: Optional[str] = None) -> CallTree:
+    def tree(self, target: str | None = None) -> CallTree:
         if target is not None:
             return self._target_source(target).tree()
         with self._lock:
@@ -254,7 +271,7 @@ class OfflineSource:
                 self._cached_mtime = mtime
             return self._cached
 
-    def device_tree(self, target: Optional[str] = None) -> Optional[CallTree]:
+    def device_tree(self, target: str | None = None) -> CallTree | None:
         """The ``device_tree.json`` beside the profile, mtime-cached per
         resolved path (a per-target dir falls back to the fleet artifact)."""
         p = device_tree_path(self.path, target)
@@ -272,6 +289,26 @@ class OfflineSource:
         if tree is not None:
             with self._lock:
                 self._device_cache[p] = (mtime, tree)
+        return tree
+
+    def static_tree(self, target: str | None = None) -> CallTree | None:
+        """The ``static_tree.json`` beside the profile, mtime-cached per
+        resolved path (a per-target dir falls back to the fleet artifact)."""
+        p = static_tree_path(self.path, target)
+        if p is None:
+            return None
+        try:
+            mtime = os.path.getmtime(p)
+        except OSError:
+            return None
+        with self._lock:
+            cached = self._static_cache.get(p)
+            if cached is not None and cached[0] >= mtime:
+                return cached[1]
+        tree = load_static_plane(self.path, target)
+        if tree is not None:
+            with self._lock:
+                self._static_cache[p] = (mtime, tree)
         return tree
 
     def targets(self) -> list[dict]:
@@ -331,7 +368,7 @@ class OfflineSource:
             "updated": profile_mtime(self.path),
         }
 
-    def timeline_dir(self, target: Optional[str] = None) -> Optional[str]:
+    def timeline_dir(self, target: str | None = None) -> str | None:
         if target is not None:
             return self._target_source(target).timeline_dir()
         return timeline_dir_of(self.path)
@@ -343,7 +380,7 @@ class _HTTPError(Exception):
         self.code = code
 
 
-def _one(q: dict, key: str, default: Optional[str] = None) -> Optional[str]:
+def _one(q: dict, key: str, default: str | None = None) -> str | None:
     vals = q.get(key)
     return vals[0] if vals else default
 
@@ -451,9 +488,9 @@ class _Handler(BaseHTTPRequestHandler):
             "  /status                         live daemon status (or offline summary)\n"
             "  /targets                        per-target status rows (multi-target daemon)\n"
             "  /tree?fmt=csv|folded|speedscope|html|json&view=NAME&target=NAME\n"
-            "       &plane=host|device|merged&metric=samples&root=SUBSTR&level=N&min_share=F\n"
+            "       &plane=host|device|merged|static&metric=samples&root=SUBSTR&level=N&min_share=F\n"
             "  /timeline?fmt=text|json&metric=samples&target=NAME\n"
-            "  /diff?baseline=PATH&fmt=text|html&plane=host|device|merged&metric=samples\n"
+            "  /diff?baseline=PATH&fmt=text|html&plane=host|device|merged|static&metric=samples\n"
         )
 
     def _targets(self) -> str:
@@ -480,7 +517,7 @@ class _Handler(BaseHTTPRequestHandler):
         host = self.server.server_address[0]
         return host.startswith("127.") or host in ("::1", "localhost")
 
-    def _view_from_query(self, q: dict) -> Optional[ViewConfig]:
+    def _view_from_query(self, q: dict) -> ViewConfig | None:
         name = _one(q, "view")
         root = _one(q, "root")
         level = _one(q, "level")
@@ -518,7 +555,7 @@ class _Handler(BaseHTTPRequestHandler):
             raise _HTTPError(400, f"unknown plane {plane!r}; choose from {', '.join(PLANES)}")
         return plane
 
-    def _plane_tree(self, tree: CallTree, plane: str, target: Optional[str]) -> CallTree:
+    def _plane_tree(self, tree: CallTree, plane: str, target: str | None) -> CallTree:
         """Resolve the requested plane over a host tree from our source.
 
         A missing device artifact is a 404 with the remedy hint (the plane
@@ -528,10 +565,17 @@ class _Handler(BaseHTTPRequestHandler):
         if plane == "host":
             return tree
         source = self.server.source
-        getter = getattr(source, "device_tree", None)
-        device = getter(target) if getter is not None else None
+        device = static = None
+        if plane == "static":
+            getter = getattr(source, "static_tree", None)
+            static = getter(target) if getter is not None else None
+        else:
+            getter = getattr(source, "device_tree", None)
+            device = getter(target) if getter is not None else None
         try:
-            return select_plane(tree, device, plane, profile=getattr(source, "path", None))
+            return select_plane(
+                tree, device, plane, profile=getattr(source, "path", None), static=static
+            )
         except PlaneError as e:
             raise _HTTPError(404, str(e)) from None
 
@@ -665,7 +709,11 @@ class _Handler(BaseHTTPRequestHandler):
             # not silently degrade to a host-only comparison.
             try:
                 baseline = select_plane(
-                    baseline, baseline_src.device_tree(), plane, profile=baseline_path
+                    baseline,
+                    baseline_src.device_tree() if plane != "static" else None,
+                    plane,
+                    profile=baseline_path,
+                    static=baseline_src.static_tree() if plane == "static" else None,
                 )
             except PlaneError as e:
                 raise _HTTPError(404, f"baseline: {e}") from None
@@ -705,7 +753,7 @@ class ProfileServer:
         source,
         host: str = "127.0.0.1",
         port: int = 0,
-        baseline: Optional[str] = None,
+        baseline: str | None = None,
         max_bytes: int = DEFAULT_MAX_BYTES,
         verbose: bool = False,
         push_sink=None,
@@ -723,7 +771,7 @@ class ProfileServer:
         self._httpd.push_max_bytes = push_max_bytes
         self._httpd._timeline_cache = {}
         self._httpd._baseline_sources = {}
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
 
     @property
     def host(self) -> str:
@@ -763,7 +811,7 @@ def fetch_status(base_url: str, timeout: float = 5.0) -> dict:
     import urllib.request  # ~200ms of ssl/email machinery only `top` needs
 
     with urllib.request.urlopen(base_url.rstrip("/") + "/status", timeout=timeout) as resp:
-        return json.loads(resp.read().decode("utf-8"))
+        return json.loads(resp.read().decode())
 
 
 def fetch_plane_tree(base_url: str, plane: str, timeout: float = 5.0) -> tuple[int, str]:
@@ -775,7 +823,7 @@ def fetch_plane_tree(base_url: str, plane: str, timeout: float = 5.0) -> tuple[i
     url = base_url.rstrip("/") + f"/tree?fmt=json&plane={plane}"
     try:
         with urllib.request.urlopen(url, timeout=timeout) as resp:
-            return 200, resp.read().decode("utf-8")
+            return 200, resp.read().decode()
     except urllib.error.HTTPError as e:
         return e.code, e.read().decode("utf-8", errors="replace")
 

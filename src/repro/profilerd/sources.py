@@ -31,7 +31,7 @@ import os
 import random
 import time
 from collections import deque
-from typing import Callable, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 from repro.core.calltree import CallTree
 from repro.core.detector import DominanceDetector, Rule, TrendDetector, TrendRule
@@ -73,11 +73,11 @@ class SpoolSource:
         name: str,
         path: str,
         *,
-        reader: Optional[SpoolReader] = None,
+        reader: SpoolReader | None = None,
         collapse_origins: Sequence[str] = (),
-        rules: Optional[Sequence[Rule]] = None,
-        trend_rule: Optional[TrendRule] = None,
-        timeline_dir: Optional[str] = None,
+        rules: Sequence[Rule] | None = None,
+        trend_rule: TrendRule | None = None,
+        timeline_dir: str | None = None,
         epochs_per_segment: int = 16,
         max_segments: int = 64,
         timeline_cap: int = 2048,
@@ -85,8 +85,8 @@ class SpoolSource:
         self.name = name
         self.path = path
         self.detector = DominanceDetector(list(rules) if rules else [Rule()])
-        self.timeline_writer: Optional[TimelineWriter] = None
-        self.trend: Optional[TrendDetector] = None
+        self.timeline_writer: TimelineWriter | None = None
+        self.trend: TrendDetector | None = None
         if timeline_dir is not None:
             self.timeline_writer = TimelineWriter(
                 timeline_dir,
@@ -117,9 +117,9 @@ class SpoolSource:
         self.backlog_bytes = 0
         self.samples_since_publish = 0
         # The last published immutable tree copy (query-plane handoff).
-        self.last_snapshot: Optional[CallTree] = None
+        self.last_snapshot: CallTree | None = None
         self.attached_wall = time.monotonic()
-        self._last_sample_wall: Optional[float] = None
+        self._last_sample_wall: float | None = None
         # Re-attach carries this across reader incarnations (decoder loss
         # counters carry inside the pipeline).
         self._dropped_base = 0
@@ -127,11 +127,11 @@ class SpoolSource:
     # -- pipeline views ------------------------------------------------------
 
     @property
-    def reader(self) -> Optional[SpoolReader]:
+    def reader(self) -> SpoolReader | None:
         return self.pipeline.reader
 
     @reader.setter
-    def reader(self, value: Optional[SpoolReader]) -> None:
+    def reader(self, value: SpoolReader | None) -> None:
         self.pipeline.reader = value
 
     @property
@@ -250,7 +250,7 @@ class SpoolSource:
 
     # -- analysis ------------------------------------------------------------
 
-    def check_stall(self, stall_timeout_s: float) -> Optional[dict]:
+    def check_stall(self, stall_timeout_s: float) -> dict | None:
         """Silence from a live target beyond the timeout -> a STALLED event."""
         if self.bye_seen or self.stalled:
             return None
@@ -275,7 +275,7 @@ class SpoolSource:
             }
         return None
 
-    def publish_window(self) -> Optional[CallTree]:
+    def publish_window(self) -> CallTree | None:
         """Snapshot + run the dominance detector if samples arrived; returns
         the new immutable tree copy (None on a quiet window)."""
         if not self.samples_since_publish:
@@ -286,7 +286,7 @@ class SpoolSource:
         self.samples_since_publish = 0
         return snap
 
-    def seal_epoch(self, wall_time: float) -> tuple[Optional[EpochMeta], list]:
+    def seal_epoch(self, wall_time: float) -> tuple[EpochMeta | None, list]:
         """Seal this target's epoch into its ring; returns (meta, verdicts)."""
         meta, entries = self.pipeline.seal_epoch(wall_time)
         if meta is None:
@@ -356,9 +356,9 @@ class SpoolSet:
         self,
         *,
         paths: Sequence[str] = (),
-        watch_dir: Optional[str] = None,
+        watch_dir: str | None = None,
         watch_glob: str = "*.spool",
-        make_source: Callable[[str, str], Optional[SpoolSource]],
+        make_source: Callable[[str, str], SpoolSource | None],
         attach_retry_base_s: float = 0.5,
         attach_retry_cap_s: float = 30.0,
         attach_max_attempts: int = 8,
@@ -382,7 +382,7 @@ class SpoolSet:
         self.gave_up_now: list[str] = []  # drained by the daemon per pass
 
     @staticmethod
-    def _fingerprint(path: str) -> Optional[tuple[int, int]]:
+    def _fingerprint(path: str) -> tuple[int, int] | None:
         try:
             st = os.stat(path)
         except OSError:

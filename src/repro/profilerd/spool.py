@@ -22,7 +22,6 @@ import mmap
 import os
 import struct
 import time
-from typing import Optional
 
 MAGIC = b"RPSP"
 SPOOL_VERSION = 1
@@ -256,7 +255,7 @@ class SpoolReader:
             return False
         return (st.st_dev, st.st_ino) != self.file_id
 
-    def read(self, max_bytes: Optional[int] = DEFAULT_READ_CAP) -> bytes:
+    def read(self, max_bytes: int | None = DEFAULT_READ_CAP) -> bytes:
         """Drain up to ``max_bytes`` (``None`` = everything available)."""
         head = self._m.get_u64(_OFF_HEAD)
         n = head - self._tail

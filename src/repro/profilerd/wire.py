@@ -72,7 +72,7 @@ from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, field
-from typing import Iterable, Iterator, Optional, Sequence, Union
+from collections.abc import Iterable, Iterator, Sequence
 
 WIRE_VERSION = 2
 
@@ -187,24 +187,24 @@ class RawSample:
     tid: int
     thread_name: str
     frames: list[RawFrame] = field(default_factory=list)
-    stack_id: Optional[int] = None
+    stack_id: int | None = None
 
 
-@dataclass
+@dataclass(slots=True)
 class Hello:
     version: int
     pid: int
     period_s: float
 
 
-@dataclass
+@dataclass(slots=True)
 class Rusage:
     t: float
     cpu_s: float
     rss_bytes: int
 
 
-@dataclass
+@dataclass(slots=True)
 class Bye:
     n_ticks: int
 
@@ -237,13 +237,13 @@ class SampleBatch:
         return len(self.t)
 
 
-Event = Union[Hello, RawSample, Rusage, Bye]
+Event = Hello | RawSample | Rusage | Bye
 
 # Keys handed back by encode_tick for transactional rollback: interned
 # strings are ``str``; interned stacks are tuples of (filename, func) pairs
 # (line numbers are deliberately not part of a stack's identity — see
 # Encoder._intern_stack).
-InternKey = Union[str, tuple]
+InternKey = str | tuple
 
 
 def _record(kind: int, payload: bytes) -> bytes:
@@ -295,7 +295,7 @@ class Encoder:
 
     def _intern_stack(
         self, frames: Sequence[RawFrame], out: list[bytes], fresh: list[InternKey]
-    ) -> Optional[int]:
+    ) -> int | None:
         """Intern one stack; returns its id, or None when the table is full
         (the caller then encodes a v1 per-frame SAMPLE for this sample)."""
         # Keyed on the (filename, func) sequence only: symbol resolution is
@@ -325,7 +325,7 @@ class Encoder:
                 self._defs_until_full = FULL_DEF_INTERVAL - 1  # keyframe
             else:
                 self._defs_until_full -= 1
-                for a, b in zip(self._def_tail, triples):
+                for a, b in zip(self._def_tail, triples, strict=False):
                     if a != b:
                         break
                     n_prefix += 1
@@ -358,7 +358,7 @@ class Encoder:
         return _record(K_HELLO, _HELLO.pack(self.version, pid, period_s))
 
     def encode_tick(
-        self, samples: Sequence[RawSample], rusage: Optional[Rusage] = None
+        self, samples: Sequence[RawSample], rusage: Rusage | None = None
     ) -> tuple[bytes, list[InternKey]]:
         """Encode one tick's samples as a single batch.
 
@@ -448,7 +448,7 @@ class Decoder:
         finally:
             del buf[:off]
 
-    def feed_batch(self, data: bytes) -> Iterator[Union[Event, SampleBatch]]:
+    def feed_batch(self, data: bytes) -> Iterator[Event | SampleBatch]:
         """Like :meth:`feed`, but contiguous ``SAMPLE2`` runs come out as
         columnar :class:`SampleBatch` objects instead of per-record
         :class:`RawSample` events.
@@ -478,7 +478,7 @@ class Decoder:
         off = 0
         pending: list = []  # structured-run copies awaiting one flush
 
-        def flush() -> Optional[SampleBatch]:
+        def flush() -> SampleBatch | None:
             if not pending:
                 return None
             arr = pending[0] if len(pending) == 1 else np.concatenate(pending)
@@ -545,7 +545,7 @@ class Decoder:
             self.unknown_stack_refs += n
         return frames
 
-    def _decode(self, kind: int, buf: bytearray, off: int, end: int) -> Optional[Event]:
+    def _decode(self, kind: int, buf: bytearray, off: int, end: int) -> Event | None:
         """Decode one record whose payload spans ``buf[off:end]``.
 
         Parsing is in place, so every variable-length count and every

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -43,7 +43,7 @@ def sharding_ctx(mesh, act_rules: dict[str, object]):
         _tls.mesh, _tls.act_rules = prev
 
 
-def shard_activation(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+def shard_activation(x: jax.Array, logical_axes: Sequence[str | None]):
     """Apply a sharding constraint if a context is installed; else identity."""
     mesh = getattr(_tls, "mesh", None)
     rules = getattr(_tls, "act_rules", None)

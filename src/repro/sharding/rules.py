@@ -18,14 +18,13 @@ touching model code.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Union
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.modules import ArraySpec, is_spec
 
-AxisMap = dict[str, Union[str, tuple[str, ...], None]]
+AxisMap = dict[str, str | tuple[str, ...] | None]
 
 
 @dataclass(frozen=True)
@@ -37,7 +36,7 @@ class Strategy:
     # by tests so a silent fallback cannot drop them.
     required: tuple[str, ...] = ()
 
-    def mesh_axes_for(self, logical: Optional[str]) -> tuple[str, ...]:
+    def mesh_axes_for(self, logical: str | None) -> tuple[str, ...]:
         if logical is None:
             return ()
         m = self.param_rules.get(logical)
@@ -49,7 +48,7 @@ class Strategy:
 def spec_for(aspec: ArraySpec, strategy: Strategy, mesh) -> P:
     axes: list = []
     used: set[str] = set()
-    for dim, logical in zip(aspec.shape, aspec.logical):
+    for dim, logical in zip(aspec.shape, aspec.logical, strict=True):
         mapped = tuple(m for m in strategy.mesh_axes_for(logical) if m not in used)
         size = 1
         for m in mapped:

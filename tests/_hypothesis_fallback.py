@@ -14,7 +14,8 @@ from __future__ import annotations
 import functools
 import inspect
 import random
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 _DEFAULT_MAX_EXAMPLES = 25
 

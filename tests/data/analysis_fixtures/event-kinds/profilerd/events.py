@@ -1,0 +1,5 @@
+"""Fixture canonical table: registers KNOWN_KIND only."""
+
+KNOWN_KIND = "KNOWN_KIND"
+
+EVENT_KINDS = frozenset({KNOWN_KIND})

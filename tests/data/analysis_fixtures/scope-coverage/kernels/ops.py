@@ -1,0 +1,16 @@
+"""Seeded violation: a public kernel wrapper that never opens named_scope."""
+
+import jax
+
+
+def flash_attention(q, k, v):  # SEEDED: public wrapper, no named_scope
+    return q @ k.T @ v
+
+
+def covered_op(x, *, scope="covered"):  # control: must NOT be flagged
+    with jax.named_scope(scope):
+        return x * 2
+
+
+def _private_helper(x):  # control: private, exempt
+    return x

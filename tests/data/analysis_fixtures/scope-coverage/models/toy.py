@@ -1,0 +1,16 @@
+"""Seeded violation: a model forward that accepts scope= and drops it."""
+
+import jax
+
+
+def forward(params, x, *, scope="toy"):  # SEEDED: scope accepted, never opened
+    return x @ params["w"]
+
+
+def good_forward(params, x, *, scope="toy"):  # control: opens the scope
+    with jax.named_scope(scope):
+        return x @ params["w"]
+
+
+def delegating_step(params, x, *, scope="toy"):  # control: forwards scope=
+    return good_forward(params, x, scope=scope)

@@ -1,0 +1,567 @@
+"""Static-analysis plane tests: extractor, envelope, repro-lint, coverage,
+baseline gating, and ``plane=static`` through the server and CLI.
+
+Pure stdlib by design — the analysis package is what CI runs on a bare
+interpreter, so nothing here may import jax or numpy.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.analysis.baseline import (
+    BASELINE_SCHEMA,
+    EXIT_PASS,
+    EXIT_REGRESSION,
+    EXIT_UNREADABLE,
+    BaselineError,
+    check,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.coverage import (
+    COVERAGE_SCHEMA,
+    coverage_report,
+    coverage_tree,
+    render_coverage,
+)
+from repro.analysis.extract import (
+    CALLS,
+    DEFS,
+    EXT_CALLS,
+    default_package_root,
+    extract_static_graph,
+    extract_to_file,
+    module_name,
+)
+from repro.analysis.lint import PASS_IDS, PASSES, Finding, RepoIndex, run_passes
+from repro.analysis.score import score_fixtures
+from repro.analysis.static_tree import (
+    STATIC_TREE_FILENAME,
+    STATIC_TREE_SCHEMA,
+    load_static_tree,
+    save_static_tree,
+    static_meta,
+)
+from repro.core.calltree import CallTree
+from repro.core.export import export_tree, to_folded
+from repro.core.planes import PLANES, PlaneError, default_metric, select_plane
+from repro.profilerd.profiles import (
+    ProfileLoadError,
+    load_static_plane,
+    static_tree_path,
+)
+
+TESTS_DIR = os.path.dirname(__file__)
+SRC_ROOT = os.path.abspath(os.path.join(TESTS_DIR, "..", "src"))
+REPRO_ROOT = os.path.join(SRC_ROOT, "repro")
+FIXTURES_DIR = os.path.join(TESTS_DIR, "data", "analysis_fixtures")
+BASELINE_PATH = os.path.join(TESTS_DIR, "data", "analysis_baseline.json")
+
+
+def write_pkg(root, files):
+    for rel, src in files.items():
+        p = os.path.join(root, rel)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "w") as f:
+            f.write(src)
+    return root
+
+
+SYNTH_PKG = {
+    "alpha.py": (
+        "def outer():\n"
+        "    inner()\n"
+        "    inner()\n"
+        "    print('x')\n"
+        "\n"
+        "def inner():\n"
+        "    return 1\n"
+    ),
+    "sub/beta.py": (
+        "class Widget:\n"
+        "    def render(self):\n"
+        "        return self.helper()\n"
+        "    def helper(self):\n"
+        "        return 0\n"
+    ),
+}
+
+
+class TestExtractor:
+    def test_synthetic_tree_shape(self, tmp_path):
+        root = write_pkg(str(tmp_path / "pkg"), SYNTH_PKG)
+        g = extract_static_graph(root, package="pkg")
+        assert g.n_modules == 2
+        assert {d.qualname for d in g.defs} == {
+            "pkg.alpha.outer",
+            "pkg.alpha.inner",
+            "pkg.sub.beta.Widget.render",
+            "pkg.sub.beta.Widget.helper",
+        }
+        flat = g.tree.flatten(DEFS)
+        assert flat["repro::outer"] == 1.0
+        assert flat["mod::pkg.alpha"] == 2.0  # module carries its def count
+        # outer -> inner resolved twice (calls metric), print is external
+        mod = g.tree.root.children["mod::pkg.alpha"]
+        outer = mod.children["repro::outer"]
+        assert outer.children["repro::inner"].metrics[CALLS] == 2.0
+        assert outer.metrics[EXT_CALLS] == 1.0
+        # methods nest under the cls:: frame
+        cls = g.tree.root.children["mod::pkg.sub.beta"].children["cls::Widget"]
+        assert set(cls.children) == {"repro::render", "repro::helper"}
+        assert g.def_names == frozenset({"outer", "inner", "render", "helper"})
+
+    def test_extraction_is_deterministic(self, tmp_path):
+        root = write_pkg(str(tmp_path / "pkg"), SYNTH_PKG)
+        a = extract_static_graph(root, package="pkg").tree.to_json()
+        b = extract_static_graph(root, package="pkg").tree.to_json()
+        assert a == b
+
+    def test_unparsable_module_raises(self, tmp_path):
+        root = write_pkg(str(tmp_path / "pkg"), {"bad.py": "def broken(:\n"})
+        with pytest.raises(SyntaxError, match="bad.py"):
+            extract_static_graph(root, package="pkg")
+
+    def test_module_name(self):
+        assert module_name("alpha.py", "pkg") == "pkg.alpha"
+        assert module_name(os.path.join("sub", "__init__.py"), "pkg") == "pkg.sub"
+
+    def test_real_repo_extracts(self):
+        g = extract_static_graph(default_package_root())
+        assert g.n_modules > 50
+        assert len(g.defs) > 500
+        assert g.n_edges > 500
+        flat = g.tree.flatten(DEFS)
+        # the resolver's symbols for the agent hot path are present
+        assert flat["repro::tick"] >= 1.0
+        assert flat["repro::_raw_stack"] >= 1.0
+
+
+class TestEnvelope:
+    def _tree(self):
+        t = CallTree()
+        t.add_stack(["mod::pkg.alpha", "repro::outer"], {DEFS: 1.0, "samples": 1.0})
+        return t
+
+    def test_round_trip_with_meta(self, tmp_path):
+        p = str(tmp_path / STATIC_TREE_FILENAME)
+        save_static_tree(self._tree(), p, meta={"modules": 1})
+        loaded = load_static_tree(p)
+        assert loaded.flatten(DEFS)["repro::outer"] == 1.0
+        assert static_meta(p) == {"modules": 1}
+        doc = json.load(open(p))
+        assert doc["schema"] == STATIC_TREE_SCHEMA
+
+    def test_legacy_bare_root_accepted(self, tmp_path):
+        p = str(tmp_path / "legacy.json")
+        with open(p, "w") as f:
+            f.write(self._tree().to_json())
+        assert load_static_tree(p).flatten(DEFS)["repro::outer"] == 1.0
+        assert static_meta(p) == {}
+
+    def test_bad_documents_raise(self, tmp_path):
+        cases = {
+            "schema.json": json.dumps({"schema": "bogus/v9", "root": {"name": "<root>"}}),
+            "list.json": "[1, 2]",
+            "rootless.json": json.dumps({"schema": STATIC_TREE_SCHEMA, "root": {}}),
+        }
+        for name, body in cases.items():
+            p = str(tmp_path / name)
+            with open(p, "w") as f:
+                f.write(body)
+            with pytest.raises(ValueError):
+                load_static_tree(p)
+
+
+class TestLint:
+    def test_clean_repo_zero_findings(self):
+        index = RepoIndex.load(REPRO_ROOT)
+        assert run_passes(index) == []
+
+    def test_every_pass_has_fixture_with_recall_one(self):
+        score = score_fixtures(FIXTURES_DIR, REPRO_ROOT)
+        assert score["ok"], json.dumps(score, indent=2)
+        for pid in PASS_IDS:
+            row = score["passes"][pid]
+            assert row["recall"] == 1.0, (pid, row)
+            assert row["precision"] == 1.0, (pid, row)
+            assert row["seeded_found"] >= 1
+
+    def test_fixture_controls_not_flagged(self):
+        # each fixture's "control" sites must stay invisible to its pass
+        index = RepoIndex.load(os.path.join(FIXTURES_DIR, "wire-slots"))
+        symbols = {f.symbol for f in run_passes(index, only="wire-slots")}
+        assert symbols == {"Sample"}
+        index = RepoIndex.load(os.path.join(FIXTURES_DIR, "scope-coverage"))
+        symbols = {f.symbol for f in run_passes(index, only="scope-coverage")}
+        assert symbols == {"flash_attention", "forward"}
+
+    def test_unknown_pass_rejected(self):
+        index = RepoIndex(".", {})
+        with pytest.raises(ValueError, match="unknown pass"):
+            run_passes(index, only="bogus-pass")
+
+    def test_finding_key_is_line_stable(self):
+        a = Finding("wire-slots", "profilerd/wire.py", 10, "Sample", "m")
+        b = Finding("wire-slots", "profilerd/wire.py", 99, "Sample", "m")
+        assert a.key() == b.key()
+        assert "10" in a.render() and "[wire-slots]" in a.render()
+
+    def test_pass_registry_ids_unique(self):
+        assert len(PASS_IDS) == len(set(PASS_IDS)) == len(PASSES) == 7
+
+
+class TestBaselineGate:
+    def test_committed_baseline_passes_on_repo(self):
+        code, report = check(REPRO_ROOT, BASELINE_PATH)
+        assert code == EXIT_PASS, report
+        assert "PASS" in report
+        assert load_baseline(BASELINE_PATH) == frozenset()
+
+    def test_new_findings_exit_regression(self, tmp_path):
+        bl = str(tmp_path / "bl.json")
+        save_baseline([], bl)
+        code, report = check(os.path.join(FIXTURES_DIR, "wire-slots"), bl)
+        assert code == EXIT_REGRESSION
+        assert "NEW:" in report and "FAIL" in report
+
+    def test_baselined_findings_pass_and_fixed_reported(self, tmp_path):
+        root = os.path.join(FIXTURES_DIR, "wire-slots")
+        bl = str(tmp_path / "bl.json")
+        code, _ = check(root, bl, update=True)
+        assert code == EXIT_PASS
+        code, report = check(root, bl)
+        assert code == EXIT_PASS, report
+        # a baseline carrying debt that no longer exists reports it as fixed
+        keys = sorted(load_baseline(bl) | {"wire-slots:profilerd/wire.py:Gone"})
+        with open(bl, "w") as f:
+            json.dump({"schema": BASELINE_SCHEMA, "root": "x", "keys": keys}, f)
+        code, report = check(root, bl)
+        assert code == EXIT_PASS
+        assert "FIXED" in report and "Gone" in report
+
+    def test_unreadable_paths_exit_3(self, tmp_path):
+        empty = str(tmp_path / "empty")
+        os.mkdir(empty)
+        code, report = check(empty, BASELINE_PATH)
+        assert code == EXIT_UNREADABLE and "no python files" in report
+        code, report = check(REPRO_ROOT, str(tmp_path / "missing.json"))
+        assert code == EXIT_UNREADABLE
+        bad = str(tmp_path / "bad.json")
+        with open(bad, "w") as f:
+            f.write("{not json")
+        code, _ = check(REPRO_ROOT, bad)
+        assert code == EXIT_UNREADABLE
+        with pytest.raises(BaselineError):
+            load_baseline(bad)
+        broken = write_pkg(str(tmp_path / "broken"), {"x.py": "def (:\n"})
+        code, _ = check(broken, BASELINE_PATH)
+        assert code == EXIT_UNREADABLE
+
+
+class COVPKG:
+    FILES = {
+        "mod.py": (
+            "def hot_fn():\n"
+            "    return cold_fn\n"
+            "\n"
+            "def cold_fn():\n"
+            "    return 0\n"
+        ),
+    }
+
+
+class TestCoverage:
+    def _graph(self, tmp_path, files=None):
+        root = write_pkg(str(tmp_path / "covpkg"), files or COVPKG.FILES)
+        return extract_static_graph(root, package="covpkg")
+
+    def _dynamic(self):
+        t = CallTree()
+        for _ in range(5):
+            t.add_stack(["thread::MainThread", "repro::hot_fn"])
+        t.add_stack(["thread::MainThread", "repro::<lambda>"])
+        t.add_stack(["thread::MainThread", "repro::*"])
+        return t
+
+    def test_cold_covered_drift_classification(self, tmp_path):
+        report = coverage_report(self._graph(tmp_path), self._dynamic())
+        assert report["schema"] == COVERAGE_SCHEMA
+        assert [e["name"] for e in report["cold"]] == ["cold_fn"]
+        assert report["cold"][0]["path"] == "mod.py"  # StaticGraph enriches sites
+        assert [e["name"] for e in report["hot"]] == ["hot_fn"]
+        assert report["hot"][0]["mass"] == 5.0
+        assert report["covered"] == 1 and report["defs"] == 2
+        assert report["coverage"] == pytest.approx(0.5)
+        # synthetic frames and origin-collapse stars never count as drift
+        assert report["drift"] == []
+
+    def test_symbolization_drift_surfaces_renamed_def(self, tmp_path):
+        # profile taken against the old source: samples land on hot_fn
+        dynamic = self._dynamic()
+        # then the def is renamed out from under the profile
+        renamed = {"mod.py": COVPKG.FILES["mod.py"].replace("hot_fn", "warm_fn")}
+        report = coverage_report(self._graph(tmp_path, renamed), dynamic)
+        drift = {e["name"]: e["mass"] for e in report["drift"]}
+        # the sampled mass did NOT vanish — it surfaces as drift, and the
+        # renamed def shows up cold (deleted defs behave identically)
+        assert drift == {"hot_fn": 5.0}
+        assert {e["name"] for e in report["cold"]} == {"warm_fn", "cold_fn"}
+        assert report["covered"] == 0
+        text = render_coverage(report)
+        assert "repro::hot_fn" in text and "drift" in text
+
+    def test_bare_tree_input_and_exports_round_trip(self, tmp_path):
+        g = self._graph(tmp_path)
+        p = str(tmp_path / STATIC_TREE_FILENAME)
+        save_static_tree(g.tree, p)
+        report = coverage_report(load_static_tree(p), self._dynamic())
+        assert "qualname" not in report["cold"][0]  # bare tree: no def sites
+        ctree = coverage_tree(report)
+        folded = to_folded(ctree)
+        assert "coverage::cold;repro::cold_fn" in folded
+        assert "coverage::covered;repro::hot_fn" in folded
+        html = export_tree(ctree, "html", metric="samples", title="cov")
+        assert "coverage::cold" in html
+
+
+class TestStaticPlane:
+    def test_planes_registry(self):
+        assert "static" in PLANES
+        assert default_metric("static", None) == DEFS
+        assert default_metric("static", "calls") == "calls"
+
+    def test_select_plane_static(self):
+        host, static = CallTree(), CallTree()
+        assert select_plane(host, None, "static", static=static) is static
+        with pytest.raises(PlaneError, match="static_tree.json"):
+            select_plane(host, None, "static", profile="/p/prof")
+        with pytest.raises(PlaneError, match="repro.analysis extract"):
+            select_plane(host, None, "static")
+
+    def test_profiles_loaders(self, tmp_path):
+        prof = tmp_path / "prof"
+        (prof / "targets" / "t0").mkdir(parents=True)
+        (prof / "tree.json").write_text(CallTree().to_json())
+        assert static_tree_path(str(prof)) is None
+        assert load_static_plane(str(prof)) is None
+        t = CallTree()
+        t.add_stack(["mod::m", "repro::f"], {DEFS: 1.0, "samples": 1.0})
+        save_static_tree(t, str(prof / STATIC_TREE_FILENAME))
+        assert static_tree_path(str(prof)) == str(prof / STATIC_TREE_FILENAME)
+        # per-target resolution falls back to the fleet-level artifact
+        assert static_tree_path(str(prof), "t0") == str(prof / STATIC_TREE_FILENAME)
+        save_static_tree(t, str(prof / "targets" / "t0" / STATIC_TREE_FILENAME))
+        assert "targets" in static_tree_path(str(prof), "t0")
+        loaded = load_static_plane(str(prof))
+        assert loaded.flatten(DEFS)["repro::f"] == 1.0
+        # a tree.json file path resolves the artifact as a sibling
+        assert static_tree_path(str(prof / "tree.json")) == str(prof / STATIC_TREE_FILENAME)
+        (prof / STATIC_TREE_FILENAME).write_text("{broken")
+        with pytest.raises(ProfileLoadError, match="unreadable static tree"):
+            load_static_plane(str(prof))
+
+    def test_shared_state_and_live_source(self):
+        from repro.profilerd.server import LiveSource, SharedProfileState
+
+        shared = SharedProfileState()
+        src = LiveSource(shared)
+        assert src.static_tree() is None
+        t = CallTree()
+        shared.set_static_tree(t)
+        assert src.static_tree() is t
+        assert src.static_tree("any-target") is t  # one artifact per fleet
+
+
+def _http_get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            return resp.status, resp.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+class TestServerStaticPlane:
+    @pytest.fixture
+    def profile_dir(self, tmp_path):
+        d = tmp_path / "prof"
+        d.mkdir()
+        host = CallTree()
+        host.add_stack(["thread::MainThread", "repro::tick"])
+        (d / "tree.json").write_text(host.to_json())
+        return d
+
+    def _serve(self, path):
+        from repro.profilerd.server import OfflineSource, ProfileServer
+
+        return ProfileServer(OfflineSource(str(path))).start()
+
+    def test_tree_plane_static(self, profile_dir, tmp_path):
+        root = write_pkg(str(tmp_path / "pkg"), SYNTH_PKG)
+        g = extract_static_graph(root, package="pkg")
+        save_static_tree(g.tree, str(profile_dir / STATIC_TREE_FILENAME), meta=g.meta())
+        server = self._serve(profile_dir)
+        try:
+            code, folded = _http_get(server.url + "/tree?plane=static&fmt=folded")
+            assert code == 200, folded
+            assert "mod::pkg.alpha;repro::outer" in folded
+            code, body = _http_get(server.url + "/tree?plane=static&fmt=json")
+            assert code == 200 and json.loads(body)["name"] == "<root>"
+            code, html = _http_get(server.url + "/tree?plane=static&fmt=html")
+            assert code == 200 and "static plane" in html
+            code, body = _http_get(server.url + "/")
+            assert "plane=host|device|merged|static" in body
+        finally:
+            server.stop()
+
+    def test_missing_artifact_404_with_hint(self, profile_dir):
+        server = self._serve(profile_dir)
+        try:
+            code, body = _http_get(server.url + "/tree?plane=static")
+            assert code == 404
+            assert "static_tree.json" in body and "repro.analysis extract" in body
+        finally:
+            server.stop()
+
+    def test_diff_plane_static(self, profile_dir, tmp_path):
+        root = write_pkg(str(tmp_path / "pkg"), SYNTH_PKG)
+        g = extract_static_graph(root, package="pkg")
+        save_static_tree(g.tree, str(profile_dir / STATIC_TREE_FILENAME))
+        server = self._serve(profile_dir)
+        try:
+            code, body = _http_get(
+                server.url + f"/diff?plane=static&baseline={profile_dir}&metric=defs"
+            )
+            assert code == 200, body
+        finally:
+            server.stop()
+
+
+class TestCLI:
+    def _run(self, module, *argv, cwd=None):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.run(
+            [sys.executable, "-m", module, *argv],
+            env=env, capture_output=True, text=True, timeout=120, cwd=cwd,
+        )
+
+    @pytest.fixture
+    def profile_with_static(self, tmp_path):
+        d = tmp_path / "prof"
+        d.mkdir()
+        host = CallTree()
+        host.add_stack(["thread::MainThread", "repro::outer"])
+        (d / "tree.json").write_text(host.to_json())
+        root = write_pkg(str(tmp_path / "pkg"), SYNTH_PKG)
+        r = self._run(
+            "repro.analysis", "extract", "--root", root, "--package", "pkg",
+            "--out", str(d),
+        )
+        assert r.returncode == 0, (r.stdout, r.stderr)
+        assert "2 modules" in r.stdout
+        return d
+
+    def test_export_static_plane_round_trips(self, profile_with_static, tmp_path):
+        out = str(tmp_path / "static.folded")
+        r = self._run(
+            "repro.profilerd", "export", str(profile_with_static),
+            "--plane", "static", "--fmt", "folded", "--out", out,
+        )
+        assert r.returncode == 0, (r.stdout, r.stderr)
+        folded = open(out).read()
+        assert "mod::pkg.alpha;repro::outer" in folded
+        r = self._run(
+            "repro.profilerd", "export", str(profile_with_static),
+            "--plane", "static", "--fmt", "html", "--out", str(tmp_path / "s.html"),
+        )
+        assert r.returncode == 0, (r.stdout, r.stderr)
+
+    def test_export_static_without_artifact_exits_4(self, tmp_path):
+        d = tmp_path / "hostonly"
+        d.mkdir()
+        (d / "tree.json").write_text(CallTree().to_json())
+        r = self._run(
+            "repro.profilerd", "export", str(d), "--plane", "static",
+            "--fmt", "folded", "--out", str(tmp_path / "o.folded"),
+        )
+        assert r.returncode == 4, (r.stdout, r.stderr)
+        assert "static_tree.json" in (r.stdout + r.stderr)
+
+    def test_analysis_check_cli(self, tmp_path):
+        r = self._run(
+            "repro.analysis", "check", "--root", REPRO_ROOT,
+            "--baseline", BASELINE_PATH,
+        )
+        assert r.returncode == 0, (r.stdout, r.stderr)
+        r = self._run(
+            "repro.analysis", "check",
+            "--root", os.path.join(FIXTURES_DIR, "agent-hot-path"),
+            "--baseline", BASELINE_PATH,
+        )
+        assert r.returncode == 2, (r.stdout, r.stderr)
+        r = self._run(
+            "repro.analysis", "check", "--root", REPRO_ROOT,
+            "--baseline", str(tmp_path / "missing.json"),
+        )
+        assert r.returncode == 3, (r.stdout, r.stderr)
+
+    def test_analysis_fixtures_cli(self):
+        r = self._run("repro.analysis", "fixtures", "--dir", FIXTURES_DIR, "--json")
+        assert r.returncode == 0, (r.stdout, r.stderr)
+        score = json.loads(r.stdout)
+        assert score["ok"] is True
+
+    def test_analysis_coverage_cli(self, profile_with_static, tmp_path):
+        r = self._run(
+            "repro.analysis", "coverage", "--profile", str(profile_with_static),
+            "--json",
+        )
+        assert r.returncode == 0, (r.stdout, r.stderr)
+        report = json.loads(r.stdout)
+        assert report["schema"] == COVERAGE_SCHEMA
+        assert {e["name"] for e in report["hot"]} == {"outer"}
+        tree_out = str(tmp_path / "covtree.json")
+        r = self._run(
+            "repro.analysis", "coverage", "--profile", str(profile_with_static),
+            "--tree", tree_out,
+        )
+        assert r.returncode == 0, (r.stdout, r.stderr)
+        assert os.path.exists(tree_out)
+
+
+class TestWireRecordsSlots:
+    def test_wire_dataclasses_have_slots(self):
+        from repro.profilerd import wire
+
+        for name in ("Hello", "Rusage", "Bye"):
+            cls = getattr(wire, name)
+            assert hasattr(cls, "__slots__"), name
+            assert "__dict__" not in cls.__slots__
+
+
+class TestEventRegistry:
+    def test_event_kinds_canonical(self):
+        from repro.profilerd import events
+
+        assert len(events.EVENT_KINDS) >= 40
+        names = [n for n in events.__all__ if n != "EVENT_KINDS"]
+        # each constant names itself and is registered
+        for n in names:
+            assert getattr(events, n) == n
+            assert n in events.EVENT_KINDS
+        assert len(names) == len(events.EVENT_KINDS)
+
+    def test_daemon_extract_to_file_meta(self, tmp_path):
+        out = str(tmp_path / STATIC_TREE_FILENAME)
+        g = extract_to_file(out)
+        meta = static_meta(out)
+        assert meta["modules"] == g.n_modules
+        assert meta["defs"] == len(g.defs)
+        assert meta["generator"] == "repro.analysis.extract"

@@ -83,9 +83,9 @@ def _descend(tree: CallTree, *names):
 def _http_get(url: str) -> tuple[int, str]:
     try:
         with urllib.request.urlopen(url, timeout=5) as resp:
-            return resp.status, resp.read().decode("utf-8")
+            return resp.status, resp.read().decode()
     except urllib.error.HTTPError as e:
-        return e.code, e.read().decode("utf-8")
+        return e.code, e.read().decode()
 
 
 class TestAnnotate:
@@ -127,7 +127,7 @@ class TestAnnotate:
     def test_annotations_survive_json_roundtrip(self):
         merged = annotate_tree(host_tree(), device_tree())
         back = CallTree.from_json(merged.to_json())
-        for (path, node), (bpath, bnode) in zip(merged.root.walk(), back.root.walk()):
+        for (path, node), (bpath, bnode) in zip(merged.root.walk(), back.root.walk(), strict=True):
             assert tuple(path) == tuple(bpath)
             assert dict(node.metrics) == dict(bnode.metrics)
 
@@ -196,7 +196,12 @@ class TestServerPlanes:
             server.stop()
 
     def test_all_planes_served_with_artifact(self, profile_dir):
+        from repro.analysis.static_tree import save_static_tree
+
         save_device_tree(device_tree(), str(profile_dir / "device_tree.json"))
+        static = CallTree()
+        static.add_stack(["mod::pkg", "repro::fn"], metrics={"defs": 1.0})
+        save_static_tree(static, str(profile_dir / "static_tree.json"))
         server = self._serve(profile_dir)
         try:
             for plane in PLANES:

@@ -83,9 +83,9 @@ def _thread_stack_funcs(thread) -> list:
 def _http_get(url: str) -> tuple[int, str]:
     try:
         with urllib.request.urlopen(url, timeout=5) as resp:
-            return resp.status, resp.read().decode("utf-8")
+            return resp.status, resp.read().decode()
     except urllib.error.HTTPError as e:
-        return e.code, e.read().decode("utf-8")
+        return e.code, e.read().decode()
 
 
 class FakeTarget:

@@ -318,7 +318,7 @@ class TestTrendDetector:
         det = TrendDetector(TrendRule(epochs=3, min_baseline_epochs=99))
         verdicts = []
         # progress stalls for only 2 epochs, then grows again
-        for e, p in enumerate([0.0, 1.0, 2.0, 2.0, 2.0, 3.0, 4.0]):
+        for _e, p in enumerate([0.0, 1.0, 2.0, 2.0, 2.0, 3.0, 4.0]):
             verdicts += det.observe_epoch(window([self.SPIN], self.WORK), progress=p)
         assert all(v.kind != LIVELOCK for v in verdicts)
 
